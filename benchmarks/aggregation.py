@@ -1,0 +1,145 @@
+"""Benchmark: event-aggregation trade-off (paper §3.1).
+
+Sweeps bucket capacity and measures, per step of a multi-chip network:
+  * wire efficiency  = payload bytes / (payload + header) bytes — the
+    header-overhead amortization that motivates aggregation;
+  * overflow fraction — congestion drops when buckets are too small;
+  * merge queue occupancy at a rate-limited destination — congestion when
+    buckets are too big (the other side of the trade-off);
+and message-rate scaling with the chip count (the Extoll message-rate axis).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delays as dl
+from repro.core import events as ev
+from repro.core import merge as mg
+from repro.core import pulse_comm as pc
+from repro.core import routing as rt
+
+
+def sweep_capacity(n_chips=8, n_neurons=256, rate=0.2, capacities=(2, 4, 8, 16, 32, 64),
+                   seed=0):
+    key = jax.random.PRNGKey(seed)
+    table = rt.random_table(key, n_neurons, n_chips, max_delay=12)
+    tables = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_chips,) + x.shape),
+                          table)
+    spikes = jax.random.uniform(key, (n_chips, n_neurons)) < rate
+    ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, n_neurons)[0])(spikes)
+    rows = []
+    for cap in capacities:
+        cfg = pc.PulseCommConfig(
+            n_chips=n_chips, neurons_per_chip=n_neurons,
+            n_inputs_per_chip=n_neurons, event_capacity=n_neurons,
+            bucket_capacity=cap, ring_depth=16,
+        )
+        rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
+            jnp.arange(n_chips))
+        step = jax.jit(lambda e, t, r: pc.multi_chip_step(cfg, e, t, r))
+        new_rings, _, stats = step(ebs, tables, rings)
+        jax.block_until_ready(new_rings.ring)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = step(ebs, tables, rings)
+        jax.block_until_ready(out[0].ring)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        sent = int(stats.sent.sum())
+        of = int(stats.overflow.sum())
+        payload = (sent - of) * pc.EVENT_BYTES
+        wire = int(stats.wire_bytes.sum())
+        rows.append({
+            "capacity": cap,
+            "us_per_step": us,
+            "wire_efficiency": payload / wire if wire else 0.0,
+            "overflow_frac": of / max(sent, 1),
+            "utilization": float(stats.utilization.mean()),
+            "events_per_step": sent,
+        })
+    return rows
+
+
+def merge_congestion(capacities=(4, 8, 16, 32), rate_limit=16, seed=1):
+    """Bigger packets arrive in bursts: a rate-limited merge buffer sees
+    higher peak occupancy (the congestion cost of aggressive aggregation)."""
+    key = jax.random.PRNGKey(seed)
+    rows = []
+    for cap in capacities:
+        n_streams = 8
+        occupancy = 0
+        buf = mg.merge_init(256)
+        drops = 0
+        for t in range(16):
+            k = jax.random.fold_in(key, t * 131 + cap)
+            # each stream delivers a full packet of `cap` events
+            dead = jax.random.randint(k, (n_streams, cap), t, t + 8)
+            addr = jax.random.randint(k, (n_streams, cap), 0, 256)
+            valid = jnp.ones((n_streams, cap), bool)
+            buf, _, d = mg.merge_step(buf, addr, dead, valid, rate=rate_limit)
+            occupancy = max(occupancy, int(buf.occupancy()))
+            drops += int(d)
+        rows.append({"capacity": cap, "peak_queue": occupancy,
+                     "merge_drops": drops})
+    return rows
+
+
+def message_rate_scaling(chip_counts=(2, 4, 8, 16), n_neurons=128, rate=0.3,
+                         seed=2):
+    key = jax.random.PRNGKey(seed)
+    rows = []
+    for n_chips in chip_counts:
+        cfg = pc.PulseCommConfig(
+            n_chips=n_chips, neurons_per_chip=n_neurons,
+            n_inputs_per_chip=n_neurons, event_capacity=n_neurons,
+            bucket_capacity=16, ring_depth=16,
+        )
+        table = rt.random_table(key, n_neurons, n_chips, max_delay=12)
+        tables = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_chips,) + x.shape), table)
+        spikes = jax.random.uniform(key, (n_chips, n_neurons)) < rate
+        ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, n_neurons)[0])(spikes)
+        rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
+            jnp.arange(n_chips))
+        step = jax.jit(lambda e, t, r: pc.multi_chip_step(cfg, e, t, r))
+        out = step(ebs, tables, rings)
+        jax.block_until_ready(out[0].ring)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = step(ebs, tables, rings)
+        jax.block_until_ready(out[0].ring)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        stats = out[2]
+        rows.append({
+            "n_chips": n_chips,
+            "us_per_step": us,
+            "events_routed": int(stats.sent.sum()),
+            "mevents_per_s": int(stats.sent.sum()) / us,
+        })
+    return rows
+
+
+def main(csv=True):
+    out = []
+    for r in sweep_capacity():
+        out.append(("aggregation_capacity_%d" % r["capacity"],
+                    r["us_per_step"],
+                    f"eff={r['wire_efficiency']:.3f};of={r['overflow_frac']:.3f};util={r['utilization']:.3f}"))
+    for r in merge_congestion():
+        out.append(("merge_congestion_cap_%d" % r["capacity"], 0.0,
+                    f"peak_queue={r['peak_queue']};drops={r['merge_drops']}"))
+    for r in message_rate_scaling():
+        out.append(("message_rate_%dchips" % r["n_chips"], r["us_per_step"],
+                    f"mev_s={r['mevents_per_s']:.3f}"))
+    if csv:
+        for name, us, derived in out:
+            print(f"{name},{us:.1f},{derived}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

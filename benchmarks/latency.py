@@ -1,0 +1,92 @@
+"""Benchmark: end-to-end pulse latency (the paper's latency axis) and the
+ISI-doubling timing relation of the NICE demo (§4, Fig. 2)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pulse_comm as pc
+from repro.core import routing as rt
+from repro.snn import network as net
+
+
+def isi_demo(n=64, delay=2, T=64):
+    comm = pc.PulseCommConfig(n_chips=2, neurons_per_chip=n,
+                              n_inputs_per_chip=n, event_capacity=n,
+                              bucket_capacity=n, ring_depth=8)
+    cfg = net.NetworkConfig(comm=comm)
+    table = rt.feedforward_table(n, src_chip=0, dst_chip=1, delay=delay)
+    params = net.init_params(jax.random.PRNGKey(0), cfg, table=table)
+    w = np.zeros((2, n, n), np.float32)
+    w[0] = 1.5 * np.eye(n)
+    w[1] = 0.6 * np.eye(n)          # two input spikes per output spike
+    params = params._replace(crossbar=params.crossbar._replace(w=jnp.asarray(w)))
+    state = net.init_state(cfg, params)
+    ext = np.zeros((T, 2, n), np.float32)
+    ext[::4, 0, :] = 1.0
+    _, rec = jax.jit(lambda p, s, e: net.run(cfg, p, s, e))(params, state,
+                                                            jnp.asarray(ext))
+    spikes = np.asarray(rec.spikes)
+    src_t = np.nonzero(spikes[:, 0, 0])[0]
+    dst_t = np.nonzero(spikes[:, 1, 0])[0]
+    return {
+        "isi_source": float(np.diff(src_t).mean()),
+        "isi_target": float(np.diff(dst_t).mean()),
+        "first_spike_latency": int(dst_t[0] - src_t[0]),
+        "voltage_trace_target": np.asarray(rec.voltage[:, 1, 0]),
+    }
+
+
+def hop_latency(hops=(1, 2, 3, 4), delay=2, n=32):
+    """Latency through a chain of chips (one exchange per hop)."""
+    rows = []
+    for n_hops in hops:
+        n_chips = n_hops + 1
+        comm = pc.PulseCommConfig(n_chips=n_chips, neurons_per_chip=n,
+                                  n_inputs_per_chip=n, event_capacity=n,
+                                  bucket_capacity=n, ring_depth=8)
+        cfg = net.NetworkConfig(comm=comm)
+        tables = []
+        for chip in range(n_chips):
+            t = rt.feedforward_table(n, src_chip=chip,
+                                     dst_chip=min(chip + 1, n_chips - 1),
+                                     delay=delay)
+            if chip == n_chips - 1:
+                t = t._replace(valid=jnp.zeros_like(t.valid))
+            tables.append(t)
+        table = jax.tree.map(lambda *xs: jnp.stack(xs), *tables)
+        params = net.init_params(jax.random.PRNGKey(0), cfg, table=table)
+        w = np.stack([1.5 * np.eye(n, dtype=np.float32)] * n_chips)
+        params = params._replace(
+            crossbar=params.crossbar._replace(w=jnp.asarray(w)))
+        state = net.init_state(cfg, params)
+        T = delay * n_hops + 4
+        ext = np.zeros((T, n_chips, n), np.float32)
+        ext[0, 0, :] = 1.0
+        _, rec = net.run(cfg, params, state, jnp.asarray(ext))
+        s = np.asarray(rec.spikes)
+        t_first = np.nonzero(s[:, -1, 0])[0]
+        rows.append({"hops": n_hops,
+                     "latency_steps": int(t_first[0]) if len(t_first) else -1,
+                     "expected": delay * n_hops})
+    return rows
+
+
+def main(csv=True):
+    out = []
+    d = isi_demo()
+    out.append(("isi_demo", 0.0,
+                f"isi_src={d['isi_source']:.1f};isi_dst={d['isi_target']:.1f};latency={d['first_spike_latency']}"))
+    for r in hop_latency():
+        out.append((f"hop_latency_{r['hops']}", 0.0,
+                    f"steps={r['latency_steps']};expected={r['expected']}"))
+    if csv:
+        for name, us, derived in out:
+            print(f"{name},{us:.1f},{derived}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark: roofline table from the dry-run records (§Roofline).
+
+Reads experiments/dryrun_baseline.jsonl (and any perf-iteration JSONLs) and
+emits the per-cell three-term table.  Run the dry-run first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out experiments/dryrun_baseline.jsonl
+"""
+
+from __future__ import annotations
+
+import os
+
+from benchmarks import roofline
+
+
+def table(path="experiments/dryrun_baseline.jsonl", multi_pod=False):
+    if not os.path.exists(path):
+        return []
+    rows = roofline.load(path)
+    out = []
+    for r in rows:
+        if r["status"] != "ok" or r["multi_pod"] != multi_pod:
+            continue
+        t = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"],
+            **{k: t[k] for k in ("compute_s", "memory_s", "collective_s",
+                                 "dominant", "useful_ratio",
+                                 "roofline_frac")},
+        })
+    return out
+
+
+def main(csv=True):
+    out = []
+    for row in table():
+        name = f"roofline_{row['arch']}_{row['shape']}"
+        derived = (f"comp={row['compute_s']:.3f};mem={row['memory_s']:.3f};"
+                   f"coll={row['collective_s']:.3f};dom={row['dominant']};"
+                   f"useful={row['useful_ratio']:.3f};"
+                   f"roofline={row['roofline_frac']*100:.2f}%")
+        out.append((name, 0.0, derived))
+    if csv:
+        for name, us, derived in out:
+            print(f"{name},{us:.1f},{derived}")
+        if not out:
+            print("lm_roofline_missing,0.0,run-dryrun-first")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark: event loss from timestamp expiry vs the delay budget
+(paper §3.1: "to avoid timestamp expiration and resulting event-loss, the
+possible time for aggregation is limited by the modeled axonal delays").
+
+We model aggregation latency by holding events for ``agg_steps`` before the
+exchange (deadline stays absolute), and sweep the axonal-delay budget: when
+the hold time exceeds the delay, events expire.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import delays as dl
+from repro.core import events as ev
+from repro.core import pulse_comm as pc
+from repro.core import routing as rt
+
+
+def sweep(delays=(1, 2, 4, 8), agg_steps=(0, 1, 2, 4, 8), n=128, n_chips=4,
+          seed=0):
+    key = jax.random.PRNGKey(seed)
+    rows = []
+    for d in delays:
+        table = rt.random_table(key, n, n_chips, max_delay=d, min_delay=d)
+        tables = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_chips,) + x.shape), table)
+        for hold in agg_steps:
+            cfg = pc.PulseCommConfig(
+                n_chips=n_chips, neurons_per_chip=n, n_inputs_per_chip=n,
+                event_capacity=n, bucket_capacity=n, ring_depth=16,
+            )
+            spikes = jax.random.uniform(key, (n_chips, n)) < 0.3
+            # events stamped at t=0, but exchanged after `hold` steps:
+            ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, n)[0])(spikes)
+            rings = jax.vmap(
+                lambda _: dl.init(cfg.ring_depth, n, now=hold)
+            )(jnp.arange(n_chips))
+            _, _, stats = pc.multi_chip_step(cfg, ebs, tables, rings)
+            sent = int(stats.sent.sum())
+            rows.append({
+                "delay_budget": d,
+                "agg_hold": hold,
+                "loss_frac": int(stats.expired.sum()) / max(sent, 1),
+            })
+    return rows
+
+
+def main(csv=True):
+    out = []
+    for r in sweep():
+        out.append((f"loss_d{r['delay_budget']}_hold{r['agg_hold']}", 0.0,
+                    f"loss={r['loss_frac']:.3f}"))
+    if csv:
+        for name, us, derived in out:
+            print(f"{name},{us:.1f},{derived}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Roofline-term computation from dry-run records (EXPERIMENTS.md §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  All HLO numbers from repro.launch.hlo_stats are
+per-device (the SPMD program), so:
+
+    compute term    = hlo_flops / PEAK_FLOPS
+    memory term     = hlo_hbm_bytes / HBM_BW
+    collective term = hlo_collective_bytes / ICI_BW
+
+MODEL_FLOPS is the analytic useful work (6·N_active·D train, 2·N_active·D
+prefill, 2·N_active·B decode, + attention terms), divided by the device
+count to compare against per-device HLO FLOPs: the ratio exposes remat
+recompute, capacity-factor padding, replicated (unshardable) compute and
+the non-causal-skip of the chunked attention.
+"""
+
+from __future__ import annotations
+
+import json
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s
+ICI_BW = 50e9           # B/s per link
+
+_EMBED_KEYS = ("embed", "unembed")
+
+
+def _params_split(cfg):
+    """(embedding params, dense non-embed params, per-expert params)."""
+    import jax
+
+    from repro.models import lm
+    from repro.models.spec import ParamSpec
+
+    spec = lm.model_spec(cfg)
+    embed = dense = expert = 0
+    flat, _ = jax.tree.flatten_with_path(
+        spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+    for path, s in flat:
+        n = 1
+        for d in s.shape:
+            n *= d
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        if any(k in keys for k in _EMBED_KEYS):
+            embed += n
+        elif "moe" in keys and "router" not in keys:
+            expert += n
+        else:
+            dense += n
+    return embed, dense, expert
+
+
+def active_params(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts."""
+    embed, dense, expert = _params_split(cfg)
+    total = embed + dense + expert
+    active_expert = expert * (cfg.top_k / cfg.n_experts) if cfg.n_experts else 0
+    return total, embed + dense + active_expert
+
+
+def attention_flops(cfg, seq: int, batch: int, *, causal_half: bool) -> float:
+    """Score+PV matmul FLOPs for one forward pass (not in 6ND)."""
+    if cfg.attn_layers == 0:
+        return 0.0
+    d_attn = cfg.n_heads * cfg.d_head
+    full = 4.0 * batch * seq * seq * d_attn * cfg.attn_layers
+    return full / 2 if causal_half else full
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs for one step of this cell (global)."""
+    gb, s = shape.global_batch, shape.seq_len
+    total, active = active_params(cfg)
+    if cfg.is_encdec and shape.kind in ("decode", "long_decode"):
+        embed, dense, _ = _params_split(cfg)
+        frac_dec = cfg.n_layers / (cfg.encoder_layers + cfg.n_layers)
+        d_attn = cfg.n_heads * cfg.d_head
+        base = 2.0 * dense * frac_dec * gb
+        cross = 4.0 * gb * s * d_attn * cfg.n_layers
+        self_a = 4.0 * gb * cfg.max_target_len * d_attn * cfg.n_layers
+        return base + cross + self_a
+    if cfg.is_encdec:
+        # split dense params across the two stacks (by layer count) and
+        # charge each stack only its own token axis; cross/self/enc
+        # attention terms added explicitly.
+        embed, dense, _ = _params_split(cfg)
+        frac_enc = cfg.encoder_layers / (cfg.encoder_layers + cfg.n_layers)
+        td = gb * cfg.max_target_len
+        te = gb * s
+        d_attn = cfg.n_heads * cfg.d_head
+        fwd = 2.0 * (dense * frac_enc * te + dense * (1 - frac_enc) * td)
+        fwd += 4.0 * gb * s * s * d_attn * cfg.encoder_layers        # enc
+        fwd += 4.0 * gb * cfg.max_target_len * s * d_attn * cfg.n_layers  # cross
+        fwd += 2.0 * gb * cfg.max_target_len ** 2 * d_attn * cfg.n_layers  # self
+        return 3.0 * fwd if shape.kind == "train" else fwd
+    toks = gb * s
+    if shape.kind == "train":
+        base = 6.0 * active * toks
+        attn = 3.0 * attention_flops(cfg, s, gb, causal_half=True)
+        return base + attn
+    if shape.kind == "prefill":
+        base = 2.0 * active * toks
+        attn = attention_flops(cfg, s, gb, causal_half=True)
+        return base + attn
+    # decode: one token per sequence; attention reads the whole cache
+    base = 2.0 * active * gb
+    d_attn = cfg.n_heads * cfg.d_head
+    from repro.models.lm import cache_len_for
+
+    c_len = cache_len_for(cfg, shape)
+    attn = 4.0 * gb * c_len * d_attn * cfg.attn_layers
+    return base + attn
+
+
+def terms(record: dict) -> dict:
+    h = record["hlo"]
+    compute = h["flops"] / PEAK_FLOPS
+    memory = h["hbm_bytes"] / HBM_BW
+    collective = h["collective_total"] / ICI_BW
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", collective),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "bound_s": max(compute, memory, collective),
+    }
+
+
+def analyze_record(record: dict) -> dict:
+    import repro.configs as C
+
+    cfg = C.get(record["arch"])
+    shape = C.SHAPES[record["shape"]]
+    t = terms(record)
+    mf = model_flops(cfg, shape)
+    n_dev = record["n_devices"]
+    hlo_total = record["hlo"]["flops"] * n_dev
+    t["model_flops"] = mf
+    t["hlo_flops_total"] = hlo_total
+    t["useful_ratio"] = mf / hlo_total if hlo_total else 0.0
+    # roofline fraction: useful work per second at the bound, vs peak
+    t["roofline_frac"] = (
+        (mf / n_dev / t["bound_s"]) / PEAK_FLOPS if t["bound_s"] > 0 else 0.0
+    )
+    return t
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("status") == "ok":
+            r["roofline"] = analyze_record(r)
+        rows.append(r)
+    return rows

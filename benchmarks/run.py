@@ -1,0 +1,27 @@
+"""Benchmark harness — one module per paper evaluation axis.
+
+  aggregation  — throughput / wire-efficiency / overflow vs bucket capacity,
+                 merge congestion, message-rate scaling (paper §3.1 + the
+                 Extoll bandwidth/message-rate axes)
+  latency      — ISI-doubling demo timing + per-hop latency (paper §4)
+  loss_budget  — event loss vs axonal-delay budget (paper §3.1 expiry)
+  lm_roofline  — per-(arch x shape) roofline terms from the dry-run
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import aggregation, latency, lm_roofline, loss_budget
+
+    print("name,us_per_call,derived")
+    aggregation.main()
+    latency.main()
+    loss_budget.main()
+    lm_roofline.main()
+
+
+if __name__ == "__main__":
+    main()

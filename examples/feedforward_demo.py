@@ -1,0 +1,67 @@
+"""The paper's NICE-2022 technical demonstration (§4, Fig. 2):
+
+A population on chip 0, driven by regular background input, projects through
+the Extoll-analogue network onto chip 1, whose neurons are configured to
+need TWO input spikes per output spike — so the inter-spike interval doubles
+from source to target.  We record the "oscilloscope traces" (membrane
+voltages at the analog probing pins) and the event-timing relation.
+
+  PYTHONPATH=src python examples/feedforward_demo.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pulse_comm as pc
+from repro.core import routing as rt
+from repro.snn import network as net
+
+N, DELAY, T = 64, 2, 48
+
+comm = pc.PulseCommConfig(
+    n_chips=2, neurons_per_chip=N, n_inputs_per_chip=N,
+    event_capacity=N, bucket_capacity=N, ring_depth=8,
+)
+cfg = net.NetworkConfig(comm=comm, neuron_model="lif")
+table = rt.feedforward_table(N, src_chip=0, dst_chip=1, delay=DELAY)
+params = net.init_params(jax.random.PRNGKey(0), cfg, table=table)
+
+w = np.zeros((2, N, N), np.float32)
+w[0] = 1.5 * np.eye(N)   # chip 0: one external spike -> one output spike
+w[1] = 0.6 * np.eye(N)   # chip 1: needs two input spikes to fire
+params = params._replace(crossbar=params.crossbar._replace(w=jnp.asarray(w)))
+state = net.init_state(cfg, params)
+
+ext = np.zeros((T, 2, N), np.float32)
+ext[::4, 0, :] = 1.0     # background generator: ISI = 4 on chip 0
+
+final, rec = jax.jit(lambda p, s, e: net.run(cfg, p, s, e))(
+    params, state, jnp.asarray(ext))
+
+spikes = np.asarray(rec.spikes)
+v = np.asarray(rec.voltage)
+src_t = np.nonzero(spikes[:, 0, 0])[0]
+dst_t = np.nonzero(spikes[:, 1, 0])[0]
+
+print("source spikes (chip 0, neuron 0):", src_t.tolist())
+print("target spikes (chip 1, neuron 0):", dst_t.tolist())
+print(f"\nISI source = {np.diff(src_t).mean():.1f}  "
+      f"ISI target = {np.diff(dst_t).mean():.1f}  (doubling expected)")
+print(f"first-spike latency = {dst_t[0] - src_t[0]} steps "
+      f"(axonal delay {DELAY} + 2nd-spike wait)")
+
+# ASCII oscilloscope: target membrane between spikes steps up by ~0.6/spike
+print("\ntarget neuron membrane trace (chip 1, neuron 0):")
+for t in range(0, 24):
+    bar = "#" * int(max(v[t, 1, 0], 0) * 40)
+    mark = " <- spike" if spikes[t, 1, 0] > 0.5 else ""
+    print(f"  t={t:2d} |{bar:<28s}| v={v[t, 1, 0]:+.2f}{mark}")
+
+stats = rec.stats
+print(f"\nnetwork: {int(np.asarray(stats.sent).sum())} events routed, "
+      f"{int(np.asarray(stats.overflow).sum())} overflow, "
+      f"{int(np.asarray(stats.expired).sum())} expired, "
+      f"mean utilization {float(np.asarray(stats.utilization).mean()):.2f}")
+assert abs(np.diff(dst_t).mean() - 2 * np.diff(src_t).mean()) < 1e-6
+print("ISI doubling REPRODUCED")

@@ -1,0 +1,48 @@
+"""MoE token dispatch on the paper's bucket machinery (DESIGN.md §5).
+
+Shows the correspondence explicitly: the same ``compute_slots`` contract
+packs pulse events into per-destination-chip buckets and tokens into
+per-expert capacity slabs — with identical overflow accounting.
+
+  PYTHONPATH=src python examples/moe_routing.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.core import buckets as bk
+from repro.models import lm, moe
+
+cfg = C.get("granite-moe-1b-a400m").reduced()
+key = jax.random.PRNGKey(0)
+params = lm.init(key, cfg)
+
+x = jax.random.normal(key, (4, 32, cfg.d_model), jnp.float32)
+moe_params = params["blocks"]["pos0"]["moe"]
+moe_params = jax.tree.map(lambda p: p[0], moe_params)  # first repeat
+
+print(f"{cfg.n_experts} experts, top-{cfg.top_k}, "
+      f"capacity factor {cfg.capacity_factor}")
+for cf in (2.0, 1.0, 0.5, 0.25):
+    c = dataclasses.replace(cfg, capacity_factor=cf)
+    y, metrics = moe.moe_apply(c, moe_params, x, None)
+    print(f"  cf={cf:4.2f}: capacity={moe.capacity(c, x.shape[0]*x.shape[1]):4d}  "
+          f"dropped={float(metrics['drop_fraction']):.3f}  "
+          f"bucket_util={float(metrics['bucket_utilization']):.3f}  "
+          f"aux_loss={float(metrics['aux_loss']):.3f}")
+
+# the identical contract on raw pulse events:
+print("\nsame slot contract, pulse events vs tokens:")
+e = 64
+dest = jax.random.randint(key, (e,), 0, cfg.n_experts)
+slot_events, counts = bk.compute_slots(dest, jnp.ones(e, bool), cfg.n_experts)
+slot_tokens, counts2 = bk.compute_slots_sorted(dest, jnp.ones(e, bool),
+                                               cfg.n_experts)
+assert np.array_equal(np.asarray(slot_events), np.asarray(slot_tokens))
+assert np.array_equal(np.asarray(counts), np.asarray(counts2))
+print("  compute_slots (events, one-hot) == compute_slots_sorted (tokens, "
+      "sort-based): VERIFIED")

@@ -1,0 +1,15 @@
+"""Batched serving example: prefill a batch of prompts, decode with a KV
+cache, report throughput.  Thin wrapper over the production serve driver.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "internlm2-1.8b", "--reduced",
+                "--batch", "4", "--prompt-len", "32", "--gen", "16",
+                *sys.argv[1:]]
+    serve.main()

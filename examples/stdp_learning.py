@@ -1,0 +1,42 @@
+"""On-chip plasticity over the interconnect: STDP learns which input
+pathway causes postsynaptic firing, while spikes keep flowing through the
+full Extoll-analogue pipeline.
+
+  PYTHONPATH=src python examples/stdp_learning.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pulse_comm as pc
+from repro.core import routing as rt
+from repro.snn import network as net
+from repro.snn import stdp
+
+N = 16
+comm = pc.PulseCommConfig(n_chips=2, neurons_per_chip=N, n_inputs_per_chip=N,
+                          event_capacity=N, bucket_capacity=N, ring_depth=8)
+cfg = net.NetworkConfig(comm=comm)
+table = rt.feedforward_table(N, src_chip=0, dst_chip=1, delay=2)
+params = net.init_params(jax.random.PRNGKey(0), cfg, table=table)
+params = params._replace(crossbar=params.crossbar._replace(
+    w=jnp.full((2, N, N), 0.3)))
+state = net.init_state(cfg, params)
+
+T = 96
+ext = np.zeros((T, 2, N), np.float32)
+ext[::8, 0, : N // 2] = 3.0    # pathway A: causes firing
+ext[::8, 0, N // 2:] = 0.05    # pathway B: subthreshold noise
+
+scfg = stdp.STDPConfig(a_plus=0.03, a_minus=0.01, tau_minus=5.0)
+new_params, _, rec, _ = jax.jit(
+    lambda p, s, e: net.run_plastic(cfg, p, s, e, stdp_cfg=scfg)
+)(params, state, jnp.asarray(ext))
+
+w = np.asarray(new_params.crossbar.w[0])
+print(f"pathway A (causal)  mean weight: 0.300 -> {w[:N//2].mean():.3f}")
+print(f"pathway B (noise)   mean weight: 0.300 -> {w[N//2:].mean():.3f}")
+print(f"events routed chip0->chip1: {int(np.asarray(rec.stats.sent).sum())}")
+assert w[:N // 2].mean() > w[N // 2:].mean()
+print("STDP separated the causal pathway while pulses crossed the network.")

@@ -1,0 +1,104 @@
+"""End-to-end training driver: train a ~100M-parameter LM for a few hundred
+steps with the full production substrate (deterministic data pipeline,
+AdamW, async checkpointing, crash-resumable).
+
+The default preset is CPU-sized so the example runs here; --preset 100m
+selects the 100M-parameter config (the "real" run for a TPU host), --steps
+controls duration.  Both resume from --ckpt-dir if interrupted.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 60
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro import configs as C
+from repro.configs.base import ShapeConfig
+from repro.data import Prefetcher, stream
+from repro.models import lm
+from repro.optim import adamw, schedules
+
+PRESETS = {
+    # ~2M params: runs everywhere
+    "tiny": dict(d_model=128, n_layers=4, n_heads=4, n_kv_heads=2,
+                 d_ff=512, vocab_size=2048, batch=8, seq=64),
+    # ~100M params: the deliverable-scale config (use on a real host)
+    "100m": dict(d_model=768, n_layers=12, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab_size=32000, batch=32, seq=512),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="tiny")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = dataclasses.replace(
+        C.get("internlm2-1.8b"),
+        name=f"lm-{args.preset}", d_model=p["d_model"],
+        n_layers=p["n_layers"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], d_head=p["d_model"] // p["n_heads"],
+        d_ff=p["d_ff"], vocab_size=p["vocab_size"], dtype="float32",
+    )
+    shape = ShapeConfig("train", p["seq"], p["batch"], "train")
+    from repro.models.spec import count_params
+
+    n_params = count_params(lm.model_spec(cfg))
+    print(f"config {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"batch {p['batch']}x{p['seq']}")
+
+    params = lm.init(jax.random.PRNGKey(args.seed), cfg)
+    state = {"params": params, "opt": adamw.init(params)}
+    start = 0
+    last = ckpt.latest_step(args.ckpt_dir)
+    if last is not None:
+        state = ckpt.restore(args.ckpt_dir, last, state)
+        start = last + 1
+        print(f"resumed from checkpoint at step {last}")
+
+    @jax.jit
+    def step_fn(state, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda q: lm.loss_fn(cfg, q, batch, remat=False), has_aux=True
+        )(state["params"])
+        lr = schedules.warmup_cosine(state["opt"].count, peak_lr=args.lr,
+                                     warmup_steps=20, total_steps=args.steps)
+        np_, no_, om = adamw.update(grads, state["opt"], state["params"],
+                                    lr=lr)
+        metrics.update(om)
+        return {"params": np_, "opt": no_}, metrics
+
+    writer = ckpt.AsyncCheckpointer(args.ckpt_dir)
+    t0, tokens = time.time(), 0
+    try:
+        for step, batch in Prefetcher(stream(cfg, shape, args.seed,
+                                             start_step=start)):
+            if step >= args.steps:
+                break
+            state, metrics = step_fn(state, batch)
+            tokens += p["batch"] * p["seq"]
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"step {step:4d}  loss {float(metrics['loss']):.4f}  "
+                      f"gnorm {float(metrics['grad_norm']):.2f}  "
+                      f"{tokens/(time.time()-t0):,.0f} tok/s", flush=True)
+            if (step + 1) % 20 == 0 or step == args.steps - 1:
+                writer.save(state, step)
+    finally:
+        writer.close()
+        ckpt.gc_old(args.ckpt_dir, keep=2)
+    print("done — rerun the same command to resume from the last checkpoint")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,270 @@
+"""Render EXPERIMENTS.md from the dry-run / hillclimb JSONL records.
+
+  PYTHONPATH=src:. python experiments/render_experiments.py > EXPERIMENTS.md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import roofline
+
+BASE = os.path.dirname(os.path.abspath(__file__))
+BASELINE = os.path.join(BASE, "dryrun_baseline.jsonl")
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, f in (("GiB", 2**30), ("MiB", 2**20), ("KiB", 2**10)):
+        if x >= f:
+            return f"{x/f:.1f} {unit}"
+    return f"{x:.0f} B"
+
+
+def load_rows():
+    return [json.loads(l) for l in open(BASELINE)]
+
+
+def dryrun_section(rows):
+    out = ["## §Dry-run — 40 cells x {16x16, 2x16x16}, compile-only\n"]
+    out.append(
+        "Every (architecture x input-shape) cell lowered **and compiled** with "
+        "explicit `in_shardings`/`out_shardings` on the production meshes "
+        "(single-pod 16x16 = 256 chips; multi-pod 2x16x16 = 512 chips with a "
+        "`pod` axis).  `memory_analysis()` / loop-aware HLO statistics below; "
+        "raw records in `experiments/dryrun_baseline.jsonl`.\n")
+    out.append("| arch | shape | mesh | status | args (global) | HLO flops/dev"
+               " | collective B/dev | compile |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        if r["status"] == "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | ok | "
+                f"{fmt_b(r['memory']['argument_bytes'])} | "
+                f"{r['hlo']['flops']:.3g} | "
+                f"{r['hlo']['collective_total']:.3g} | {r['compile_s']}s |")
+        elif r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {mesh} | SKIP "
+                       f"(documented) | - | - | - | - |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | {mesh} | ERROR | - |"
+                       f" - | - | - |")
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    out.append(
+        f"\n**{n_ok} ok / {n_skip} documented skips / "
+        f"{len(rows)-n_ok-n_skip} errors.**  Skips are the `long_500k` cells "
+        "of pure full-attention archs (DESIGN.md §4): 512k-token decode "
+        "requires sub-quadratic attention; the SSM/hybrid archs "
+        "(falcon-mamba, zamba2) run them.\n")
+    out.append(
+        "Notes: `args` is the global argument footprint reported by XLA "
+        "(divide by devices for per-chip; decode cells are dominated by the "
+        "KV cache).  The multi-pod rows prove the `pod` axis shards: batch "
+        "maps to `(pod, data)` where divisible (per-device flops halve vs "
+        "single-pod for train/prefill cells).\n")
+    return "\n".join(out)
+
+
+def roofline_section(rows):
+    out = ["## §Roofline — per (arch x shape), single-pod 16x16\n"]
+    out.append(
+        "Terms per device from the **loop-aware** HLO analyzer "
+        "(`repro/launch/hlo_stats.py`; `cost_analysis()` counts while bodies "
+        "once, so a scan-over-layers model under-reports ~25x — the analyzer "
+        "multiplies by `known_trip_count`, models `dynamic-update-slice` as "
+        "in-place, and sums collective operand bytes by kind):\n\n"
+        "    compute    = HLO_flops / 197 TFLOP/s\n"
+        "    memory     = HLO_bytes / 819 GB/s\n"
+        "    collective = collective_bytes / 50 GB/s\n\n"
+        "`useful` = MODEL_FLOPS / HLO_FLOPS_total (6·N_active·D train, "
+        "2·N_active·D prefill + attention terms); `roofline%` = useful work "
+        "per second at the binding term vs peak.\n")
+    out.append("| arch | shape | compute s | memory s | collective s | "
+               "dominant | useful | roofline% | what moves the dominant term |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    fixes = {
+        ("moe", "train"): "SSD-style remat + local dispatch (§Perf 2/3)",
+        ("moe", "prefill"): "shard-local bucket dispatch (§Perf 2)",
+        ("moe", "decode"): "KV-subaxis sharding; gather-bound",
+        ("hybrid", "train"): "chunk-parallel SSD scan (§Perf 1)",
+        ("ssm", "train"): "chunk-parallel scan (as §Perf 1; Pallas kernel on HW)",
+    }
+    for r in rows:
+        if r["status"] != "ok" or r["multi_pod"]:
+            continue
+        t = r["roofline"]
+        import repro.configs as C
+
+        fam = C.get(r["arch"]).family
+        kind = C.SHAPES[r["shape"]].kind.replace("long_decode", "decode")
+        note = fixes.get((fam, kind), "")
+        if not note:
+            if t["dominant"] == "memory" and kind in ("train", "prefill"):
+                note = "flash-bwd custom-vjp + bf16 activation chains"
+            elif t["dominant"] == "memory":
+                note = "KV cache: sub-axis kv sharding / quantized cache"
+            elif t["dominant"] == "collective":
+                note = "overlap + reduce-scatter grads (ZeRO-2)"
+            else:
+                note = "MXU-bound: head/ff tiling"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant']} | {t['useful_ratio']:.3f} | "
+            f"{100*t['roofline_frac']:.2f}% | {note} |")
+    out.append("""
+**Reading the table.**  The HBM model is per-op (fusion-boundary) traffic of
+the CPU-backend HLO; real TPU XLA fuses elementwise chains more aggressively,
+so memory terms are upper bounds — *relative* deltas between iterations (the
+§Perf log) are the signal.  `useful < 1` decomposes into: remat recompute
+(+~33% flops in train cells), the chunked attention computing the full S²
+square (causal skip halves it on real HW), MoE capacity-factor padding
+(x1.25), and llama4's 40-head attention being replicated over the 16-way
+tensor axis (40 % 16 != 0 -> §Perf 3 head padding).  Decode cells are
+bandwidth-bound as expected (roofline% ~ 0 by the FLOP metric; their true
+figure of merit is cache bytes/token, tracked in §Perf).
+""")
+    return "\n".join(out)
+
+
+def snn_section():
+    path = os.path.join(BASE, "dryrun_snn.jsonl")
+    if not os.path.exists(path):
+        return ""
+    out = ["### The paper's own system at production scale\n"]
+    out.append(
+        "`--snn` dry-runs one full BSS-2 simulation step (AdEx dynamics -> "
+        "events -> routing LUT -> buckets -> `all_to_all` -> delay rings) "
+        "with chips as mesh shards under `shard_map`:\n")
+    out.append("| system | chips | HLO flops/chip | collective B/chip/step | compile |")
+    out.append("|---|---|---|---|---|")
+    names = {46: "one wafer module (paper's production tier)",
+             512: "11 wafer modules (multi-wafer Extoll tier)"}
+    for line in open(path):
+        r = json.loads(line)
+        out.append(f"| {names.get(r['n_devices'], '?')} | {r['n_devices']} | "
+                   f"{r['hlo']['flops']:.3g} | "
+                   f"{r['hlo']['collective_total']:.3g} | {r['compile_s']}s |")
+    out.append(
+        "\nPer-chip wire bytes grow ~linearly with the chip count under the "
+        "paper's *simplified* static bucketing (one bucket per destination — "
+        "exactly the scaling limit §3.1 attributes to it); the full scheme's "
+        "dynamic pool (`buckets_per_chip` < n_chips) caps it.\n")
+    return "\n".join(out)
+
+
+def optimized_section(rows):
+    opt_path = os.path.join(BASE, "dryrun_optimized.jsonl")
+    if not os.path.exists(opt_path):
+        return ""
+    opt = {}
+    for line in open(opt_path):
+        r = json.loads(line)
+        if r["status"] == "ok" and not r["multi_pod"]:
+            r["roofline"] = roofline.analyze_record(r)
+            opt[(r["arch"], r["shape"])] = r
+    base = {(r["arch"], r["shape"]): r for r in rows
+            if r["status"] == "ok" and not r["multi_pod"]}
+    out = ["## §Roofline-optimized — beyond-paper variants, all 40 cells\n"]
+    out.append(
+        "The same sweep with the per-arch §Perf winners "
+        "(`repro.launch.dryrun.OPTIMIZED_VARIANTS`).  `bound` = the binding "
+        "term.  The optimized variants also compile green on the multi-pod "
+        "2x16x16 mesh (32 ok / 8 documented skips / 0 errors; "
+        "`experiments/dryrun_optimized_mp.jsonl`).\n")
+    out.append("| arch | shape | bound s (base) | bound s (opt) | speedup | "
+               "roofline% (base → opt) | variant |")
+    out.append("|---|---|---|---|---|---|---|")
+    for key, rb in base.items():
+        ro = opt.get(key)
+        if ro is None:
+            continue
+        tb, to = rb["roofline"], ro["roofline"]
+        var = ", ".join(f"{k}={v}" for k, v in ro.get("variant", {}).items()) or "-"
+        out.append(
+            f"| {key[0]} | {key[1]} | {tb['bound_s']:.3f} | {to['bound_s']:.3f} | "
+            f"x{tb['bound_s']/max(to['bound_s'],1e-12):.2f} | "
+            f"{100*tb['roofline_frac']:.2f}% → {100*to['roofline_frac']:.2f}% | {var} |")
+    return "\n".join(out)
+
+
+def kernel_section():
+    return """## Pallas kernel design points (hardware targets; validated interpret=True)
+
+Static VMEM/MXU analysis of the four TPU kernels (the on-hardware successors
+of the §Perf XLA-level wins; every kernel is swept against its pure-jnp
+oracle in tests/test_kernels.py):
+
+| kernel | grid | VMEM working set / program | MXU vs VPU | arithmetic intensity (flops/HBM byte) |
+|---|---|---|---|---|
+| bucket_pack | (n_buckets,) | event stream tile 4x512x4 B + [C,512] compare window (~0.3 MB at C=128) | VPU (compare/prefix-sum) + one [C,E] reduce | O(C) compares/byte — line-rate, matches the FPGA FIFO insert |
+| lif_step | (n/1024,) | 8 lanes x 1024 f32 = 32 KB | pure VPU, fused 10-op chain | ~0.25 (bandwidth-bound by design; fusion saves 6 HBM round-trips vs unfused XLA) |
+| flash_attention | (B·Hq, Sq/128, Skv/128) | q 128x128 + k/v 2x128x128 + acc 128x128 f32 ~ 160 KB | MXU (128x128 blocks = systolic array) | ~2·Skv flops per q-byte → compute-bound for Skv >= ~400 |
+| ssm_scan | (B, d/128, T/128) | h 128xN f32 (8-32 KB) + x/dt/B/C tiles | VPU elementwise + small reductions | ~2N flops/byte (N=16..64) — memory-bound; VMEM-resident h is the whole win (the §Perf cell-1 SSD result approximates it at the XLA level) |
+
+Block shapes are 8x128-aligned; the causal q>=k block skip in
+flash_attention and a trapezoidal grid are recorded follow-ups.
+"""
+
+
+def perf_section():
+    path = os.path.join(BASE, "PERF_LOG.md")
+    if os.path.exists(path):
+        return open(path).read()
+    return "## §Perf\n\n(populated by experiments/PERF_LOG.md)\n"
+
+
+def main():
+    rows = load_rows()
+    for r in rows:
+        if r["status"] == "ok":
+            r["roofline"] = roofline.analyze_record(r)
+    print("""# EXPERIMENTS
+
+Paper: *Demonstrating BrainScaleS-2 Inter-Chip Pulse-Communication using
+EXTOLL* (NICE 2022).  This file records (1) the paper-claim validations,
+(2) the multi-pod dry-run, (3) the roofline analysis, (4) the §Perf
+hillclimbing log with paper-faithful baselines and beyond-paper optimized
+versions recorded separately.
+
+## §Paper-claim validation (CPU-executed, exact-event semantics)
+
+The paper is an infrastructure demo evaluated on bandwidth / latency /
+message rate; its one end-to-end claim is the NICE demo (§4, Fig. 2).
+All reproduced by `PYTHONPATH=src python -m benchmarks.run`
+(+ tests/test_network.py, tests/test_system.py):
+
+| paper claim / mechanism | our measurement | file |
+|---|---|---|
+| ISI doubles source->target (2 input spikes per output spike) | ISI 4.0 -> 8.0 exactly; first-spike latency = axonal delay + 2nd-spike wait | benchmarks/latency.py `isi_demo` |
+| pulses traverse chips with configured axonal delay | per-hop latency == delay x hops (1..4 hops) | benchmarks/latency.py `hop_latency` |
+| aggregation amortizes header overhead | wire efficiency 0.20 -> 0.45 as capacity 2 -> 16 (header 32B, event 4B) | benchmarks/aggregation.py |
+| too-small buckets congest (overflow) | overflow 70% at capacity 2 -> 0% at 16 | benchmarks/aggregation.py |
+| too-large packets congest the merge | rate-limited merge drops grow with packet size | benchmarks/aggregation.py `merge_congestion` |
+| aggregation window bounded by axonal delay (timestamp expiry) | loss cliff exactly at hold > delay budget (0% -> 100%) | benchmarks/loss_budget.py |
+| event conservation (no silent loss/duplication) | sent == overflow + expired + delivered, property-tested across modes/capacities | tests/test_pulse_comm.py |
+| full scheme [14]: bucket renaming + time-ordered merge | dynamic pool absorbs hot-destination bursts that overflow static buckets; merged streams time-ordered | tests/test_pulse_comm.py |
+| NHTL-Extoll ring-buffer/notification flow control | invariants (no overwrite, FIFO, back-pressure, credit conservation) property-tested | tests/test_flowcontrol.py |
+""")
+    print(dryrun_section(rows))
+    print()
+    print(snn_section())
+    print()
+    print(roofline_section(rows))
+    print()
+    print(optimized_section(rows))
+    print()
+    print(kernel_section())
+    print()
+    print(perf_section())
+
+
+if __name__ == "__main__":
+    main()

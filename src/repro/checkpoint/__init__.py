@@ -1,0 +1,13 @@
+from repro.checkpoint.store import (
+    AsyncCheckpointer,
+    gc_old,
+    latest_step,
+    restore,
+    save,
+    step_dir,
+)
+
+__all__ = [
+    "AsyncCheckpointer", "gc_old", "latest_step", "restore", "save",
+    "step_dir",
+]

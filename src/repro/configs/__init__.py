@@ -1,0 +1,40 @@
+"""Config registry: ``get(arch_id)`` resolves --arch names to ArchConfig."""
+
+from __future__ import annotations
+
+from repro.configs import bss2 as _bss2
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, runnable
+
+_MODULES = {
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "yi-9b": "repro.configs.yi_9b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "internlm2-1.8b": "repro.configs.internlm2_1p8b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+BSS2 = _bss2.CONFIG
+
+
+def get(arch_id: str) -> ArchConfig:
+    import importlib
+
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def all_archs() -> dict[str, ArchConfig]:
+    return {aid: get(aid) for aid in ARCH_IDS}
+
+
+__all__ = [
+    "ARCH_IDS", "BSS2", "SHAPES", "ArchConfig", "ShapeConfig", "all_archs",
+    "get", "runnable",
+]

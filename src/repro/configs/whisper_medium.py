@@ -1,0 +1,29 @@
+"""whisper-medium [audio] — 24L d_model=1024 16H (kv=16: full MHA) d_ff=4096
+vocab=51865; encoder-decoder with conv frontend STUB.  [arXiv:2212.04356]
+
+Modality note (DESIGN.md §4): the conv1d audio frontend is a STUB —
+``input_specs()`` provides precomputed frame embeddings [B, S, d_model].
+The assigned seq_len applies to the encoder frame axis; the decoder runs
+its own token axis (max_target_len for train, the cache axis for decode).
+GELU MLP, LayerNorm, learned-sinusoid positions (no RoPE).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,              # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=64,
+    d_ff=4096,
+    vocab_size=51865,
+    act="gelu",
+    norm="layernorm",
+    max_target_len=448,
+    long_context="skip",
+    frontend="audio_frames",
+)

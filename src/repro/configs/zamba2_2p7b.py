@@ -1,0 +1,28 @@
+"""zamba2-2.7b [hybrid] — 54L d_model=2560 32H (GQA kv=32) d_ff=10240
+vocab=32000, ssm_state=64: Mamba-2 backbone + SHARED attention block applied
+every 6th layer (the Zamba weight-sharing trick).  [arXiv:2411.15242; hf]
+
+long_500k runs: Mamba-2 layers are O(1)-state; the shared attention block
+switches to a sliding window (cfg.window) at 500k.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_head=80,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_version=2,
+    ssm_expand=2,
+    attn_every=6,
+    shared_attn=True,
+    long_context="native",
+    window=4096,
+)

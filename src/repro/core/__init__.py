@@ -1,0 +1,27 @@
+"""repro.core — the paper's contribution: table-routed, deadline-bounded,
+bucket-aggregated inter-chip pulse communication (BSS-2 over Extoll), as
+composable JAX modules."""
+
+from repro.core import buckets, delays, events, flowcontrol, merge, routing, transport
+from repro.core.pulse_comm import (
+    CommStats,
+    Delivered,
+    PulseCommConfig,
+    comm_step,
+    multi_chip_step,
+)
+
+__all__ = [
+    "buckets",
+    "delays",
+    "events",
+    "flowcontrol",
+    "merge",
+    "routing",
+    "transport",
+    "CommStats",
+    "Delivered",
+    "PulseCommConfig",
+    "comm_step",
+    "multi_chip_step",
+]

@@ -1,0 +1,96 @@
+"""Axonal-delay ring buffers (timestamp → arrival-deadline delivery).
+
+The 8-bit event timestamp is converted into an arrival deadline by adding a
+modeled axonal delay (routing LUT).  At the destination, events wait until
+their deadline and are then applied to the synapse crossbar.  On TPU the
+natural realization is a circular buffer ``ring[D, n_inputs]`` of per-slot
+spike-count vectors: depositing an event is a scatter-add at
+``(deadline mod D, dest_addr)``; advancing time pops (and zeroes) the current
+slot, yielding the dense spike vector the crossbar matmul consumes.
+
+Deadline expiry: an event whose deadline is <= now (it arrived too late) is
+counted in ``expired`` and dropped — the paper's event-loss mode when the
+aggregation window exceeds the delay budget.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DelayRing(NamedTuple):
+    """ring : int32[D, n_inputs] pending spike counts per future time slot.
+    now  : int32[]  current simulation step."""
+
+    ring: jax.Array
+    now: jax.Array
+
+    @property
+    def depth(self) -> int:
+        return self.ring.shape[0]
+
+    @property
+    def n_inputs(self) -> int:
+        return self.ring.shape[1]
+
+
+def init(depth: int, n_inputs: int, *, now: int = 0, dtype=jnp.int32) -> DelayRing:
+    """dtype int32 for the exact event path; float32 for the differentiable
+    dense bypass (snn.network comm_mode="dense")."""
+    return DelayRing(
+        ring=jnp.zeros((depth, n_inputs), dtype=dtype),
+        now=jnp.asarray(now, dtype=jnp.int32),
+    )
+
+
+def deposit(
+    state: DelayRing,
+    dest_addr: jax.Array,
+    deadline: jax.Array,
+    valid: jax.Array,
+) -> tuple[DelayRing, jax.Array]:
+    """Scatter events into their deadline slots; returns (state, expired).
+
+    An event is *deliverable* iff ``now < deadline <= now + depth`` — within
+    the ring horizon.  Earlier deadlines have expired in flight; later ones
+    exceed the horizon (also counted as expired: the hardware cannot buffer
+    beyond its ring either).
+    """
+    d = state.depth
+    ahead = deadline - state.now
+    deliverable = valid & (ahead > 0) & (ahead <= d)
+    expired = jnp.sum(valid & ~deliverable).astype(jnp.int32)
+    slot = jnp.where(deliverable, deadline % d, 0)
+    col = jnp.where(deliverable, jnp.clip(dest_addr, 0, state.n_inputs - 1), 0)
+    ring = state.ring.at[slot, col].add(deliverable.astype(jnp.int32), mode="drop")
+    return DelayRing(ring=ring, now=state.now), expired
+
+
+def pop_current(state: DelayRing) -> tuple[DelayRing, jax.Array]:
+    """Pop (and zero) the spike vector whose deadline == now.
+
+    Step protocol (see snn.network): at step t, pop deadline-t events first,
+    then run dynamics, then deposit new events (deadline >= t+1), then
+    :func:`tick`.
+    """
+    slot = state.now % state.depth
+    spikes = state.ring[slot]
+    ring = state.ring.at[slot].set(0)
+    return DelayRing(ring=ring, now=state.now), spikes
+
+
+def tick(state: DelayRing) -> DelayRing:
+    return DelayRing(ring=state.ring, now=state.now + 1)
+
+
+def advance(state: DelayRing) -> tuple[DelayRing, jax.Array]:
+    """Step time forward by one; returns (state, spikes[n_inputs]) — the
+    spike-count vector whose deadline is the new ``now``."""
+    new_now = state.now + 1
+    slot = new_now % state.depth
+    spikes = state.ring[slot]
+    ring = state.ring.at[slot].set(0)
+    return DelayRing(ring=ring, now=new_now), spikes

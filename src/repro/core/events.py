@@ -1,0 +1,125 @@
+"""Pulse-event representation.
+
+BSS-2 pulse events leave the chip as (14-bit source neuron address, 8-bit
+timestamp) pairs at up to 2 events per 125 MHz FPGA clock cycle.  On TPU we
+keep a *static-shape* structure-of-arrays buffer per simulation step: XLA
+needs fixed shapes, so the per-step event budget ``capacity`` plays the role
+of the FPGA event-interface line rate.  Invalid lanes carry ``ADDR_SENTINEL``.
+
+Timestamps are carried as int32 simulation steps.  The on-wire format is
+8-bit with wraparound; :func:`wrap8` / :func:`wrap8_diff` implement the
+wraparound arithmetic used for deadline checks so the 8-bit semantics of the
+paper are preserved where they matter (expiry), while tests can reason in
+full-width time.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+ADDR_BITS = 14
+ADDR_SENTINEL = -1
+TIME_BITS = 8
+TIME_MOD = 1 << TIME_BITS
+
+
+class EventBuffer(NamedTuple):
+    """A fixed-capacity buffer of pulse events (structure of arrays).
+
+    addr  : int32[capacity]   source (or destination) neuron address
+    time  : int32[capacity]   timestamp (simulation step)
+    valid : bool[capacity]
+    """
+
+    addr: jax.Array
+    time: jax.Array
+    valid: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.addr.shape[-1]
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32), axis=-1)
+
+
+def empty(capacity: int, *, batch_shape: tuple[int, ...] = ()) -> EventBuffer:
+    shape = batch_shape + (capacity,)
+    return EventBuffer(
+        addr=jnp.full(shape, ADDR_SENTINEL, dtype=jnp.int32),
+        time=jnp.zeros(shape, dtype=jnp.int32),
+        valid=jnp.zeros(shape, dtype=bool),
+    )
+
+
+def from_arrays(addr, time, valid=None) -> EventBuffer:
+    addr = jnp.asarray(addr, dtype=jnp.int32)
+    time = jnp.asarray(time, dtype=jnp.int32)
+    if valid is None:
+        valid = addr != ADDR_SENTINEL
+    valid = jnp.asarray(valid, dtype=bool)
+    addr = jnp.where(valid, addr, ADDR_SENTINEL)
+    return EventBuffer(addr=addr, time=time, valid=valid)
+
+
+def from_spikes(spikes: jax.Array, t, capacity: int) -> EventBuffer:
+    """Convert a dense spike vector (bool[n_neurons]) into an event buffer.
+
+    This models the chip→FPGA event interface: neuron indices that spiked at
+    step ``t`` become events.  If more than ``capacity`` neurons spiked, the
+    surplus is dropped (the FPGA interface is rate-limited to 2 events/cycle;
+    the drop count is returned so callers can account for it).
+    """
+    n = spikes.shape[-1]
+    spikes = spikes.astype(bool)
+    # Stable compaction: indices of spiking neurons first, sentinel after.
+    key = jnp.where(spikes, jnp.arange(n), n + jnp.arange(n))
+    order = jnp.argsort(key)
+    fired = jnp.cumsum(spikes.astype(jnp.int32))[-1] if n else jnp.int32(0)
+    if capacity > n:  # event budget exceeds population: pad with sentinels
+        order = jnp.concatenate(
+            [order, jnp.full((capacity - n,), ADDR_SENTINEL, order.dtype)])
+    addr = order[:capacity].astype(jnp.int32)
+    lane = jnp.arange(capacity)
+    valid = lane < jnp.minimum(fired, capacity)
+    addr = jnp.where(valid, addr, ADDR_SENTINEL)
+    time = jnp.full((capacity,), jnp.asarray(t, dtype=jnp.int32))
+    dropped = jnp.maximum(fired - capacity, 0)
+    return EventBuffer(addr=addr, time=time, valid=valid), dropped
+
+
+def to_dense(events: EventBuffer, n_neurons: int) -> jax.Array:
+    """Scatter an event buffer back into a dense per-neuron spike-count vector."""
+    addr = jnp.where(events.valid, events.addr, 0)
+    contrib = events.valid.astype(jnp.int32)
+    dense = jnp.zeros((n_neurons,), dtype=jnp.int32)
+    return dense.at[addr].add(contrib * (events.addr >= 0))
+
+
+def wrap8(t: jax.Array) -> jax.Array:
+    """Project a full-width timestamp onto the 8-bit on-wire format."""
+    return jnp.asarray(t, jnp.int32) & (TIME_MOD - 1)
+
+
+def wrap8_diff(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Signed smallest difference a-b under 8-bit wraparound (in [-128, 127]).
+
+    Used for deadline comparisons on the wire format: ``wrap8_diff(deadline,
+    now) <= 0`` means the deadline has expired, provided |true diff| < 128
+    (the paper's aggregation-window bound guarantees this: aggregation time is
+    limited by the modeled axonal delay precisely so timestamps cannot expire
+    in flight unnoticed).
+    """
+    d = (jnp.asarray(a, jnp.int32) - jnp.asarray(b, jnp.int32)) & (TIME_MOD - 1)
+    return jnp.where(d >= TIME_MOD // 2, d - TIME_MOD, d)
+
+
+def concat(a: EventBuffer, b: EventBuffer) -> EventBuffer:
+    return EventBuffer(
+        addr=jnp.concatenate([a.addr, b.addr], axis=-1),
+        time=jnp.concatenate([a.time, b.time], axis=-1),
+        valid=jnp.concatenate([a.valid, b.valid], axis=-1),
+    )

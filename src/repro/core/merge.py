@@ -1,0 +1,132 @@
+"""Merge buffers: k-way time-ordered merging of packetized event streams.
+
+At the destination, packets from multiple source streams must be merged back
+into a single time-ordered event stream (paper §3.1; deferred in the paper's
+scaled-down prototype — grayed out in its Fig. 2 — and implemented here as
+the *full* mode).
+
+Two pieces:
+
+* :func:`merge_streams` — the functional k-way merge: concatenation + stable
+  sort by (deadline, stream).  On TPU a bitonic sort over a few thousand
+  lanes is cheap and is exactly a merge network in hardware terms.
+* :class:`MergeBuffer` / :func:`merge_step` — the *rate-limited* merge buffer
+  that models congestion: per step it can emit at most ``rate`` events;
+  the rest stay queued (bounded queue → overflow drops).  This gives the
+  congestion half of the bucket-size trade-off a measurable quantity
+  (queue occupancy / drops vs. packet size).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+
+_INF = jnp.int32(2**30)
+
+
+def merge_streams(
+    addr: jax.Array, deadline: jax.Array, valid: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Merge S streams of C events into one sorted stream of S*C lanes.
+
+    Inputs are [S, C]; outputs are [S*C] sorted ascending by deadline with
+    invalid lanes pushed to the end.  Stable across streams (ties broken by
+    stream index then lane — FIFO order within a stream is preserved).
+    """
+    key = jnp.where(valid, deadline, _INF)
+    flat_key = key.reshape(-1)
+    order = jnp.argsort(flat_key, stable=True)
+    return (
+        addr.reshape(-1)[order],
+        deadline.reshape(-1)[order],
+        valid.reshape(-1)[order],
+    )
+
+
+class MergeBuffer(NamedTuple):
+    """Bounded, rate-limited merge queue (sorted by deadline).
+
+    addr/deadline : int32[depth]; valid : bool[depth] — always kept sorted
+    with valid lanes first.
+    """
+
+    addr: jax.Array
+    deadline: jax.Array
+    valid: jax.Array
+
+    @property
+    def depth(self) -> int:
+        return self.addr.shape[0]
+
+    def occupancy(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+
+def merge_init(depth: int) -> MergeBuffer:
+    return MergeBuffer(
+        addr=jnp.full((depth,), ev.ADDR_SENTINEL, jnp.int32),
+        deadline=jnp.full((depth,), _INF, jnp.int32),
+        valid=jnp.zeros((depth,), bool),
+    )
+
+
+def merge_step(
+    buf: MergeBuffer,
+    in_addr: jax.Array,
+    in_deadline: jax.Array,
+    in_valid: jax.Array,
+    *,
+    rate: int,
+) -> tuple[MergeBuffer, tuple[jax.Array, jax.Array, jax.Array], jax.Array]:
+    """One merge-buffer cycle.
+
+    1. enqueue incoming events (flattened packets) into the sorted queue;
+       events beyond ``depth`` are dropped (congestion overflow, returned).
+    2. emit the ``rate`` earliest-deadline events.
+
+    Returns (new_buf, (out_addr[rate], out_deadline[rate], out_valid[rate]),
+    dropped).
+    """
+    # Pad with `rate` invalid lanes so the post-emit slice below is always
+    # in-bounds regardless of the incoming packet size.
+    pad_i = jnp.full((rate,), ev.ADDR_SENTINEL, jnp.int32)
+    pad_d = jnp.full((rate,), _INF, jnp.int32)
+    pad_v = jnp.zeros((rate,), bool)
+    all_addr = jnp.concatenate([buf.addr, in_addr.reshape(-1), pad_i])
+    all_dead = jnp.concatenate([buf.deadline, in_deadline.reshape(-1), pad_d])
+    all_valid = jnp.concatenate([buf.valid, in_valid.reshape(-1), pad_v])
+    key = jnp.where(all_valid, all_dead, _INF)
+    order = jnp.argsort(key, stable=True)
+    all_addr = all_addr[order]
+    all_dead = all_dead[order]
+    all_valid = all_valid[order]
+
+    total = all_addr.shape[0]
+    lane = jnp.arange(total)
+    n_valid = jnp.sum(all_valid.astype(jnp.int32))
+
+    # Emit the first `rate` valid lanes.
+    out_addr = all_addr[:rate]
+    out_dead = all_dead[:rate]
+    out_valid = all_valid[:rate]
+
+    # Remaining valid events shift down by `rate`; keep at most `depth`.
+    emitted = jnp.minimum(n_valid, rate)
+    keep_valid = all_valid & (lane >= rate)
+    kept = jnp.sum(keep_valid.astype(jnp.int32))
+    dropped = jnp.maximum(kept - buf.depth, 0).astype(jnp.int32)
+
+    new_addr = jax.lax.dynamic_slice_in_dim(all_addr, rate, buf.depth)
+    new_dead = jax.lax.dynamic_slice_in_dim(all_dead, rate, buf.depth)
+    new_valid = jax.lax.dynamic_slice_in_dim(all_valid, rate, buf.depth)
+    del emitted
+    return (
+        MergeBuffer(addr=new_addr, deadline=new_dead, valid=new_valid),
+        (out_addr, out_dead, out_valid),
+        dropped,
+    )

@@ -1,0 +1,262 @@
+"""PulseComm — the paper's inter-chip pulse-communication pipeline.
+
+Composes the stages of Fig. 2 into one functional step, per chip:
+
+    spikes → events → routing LUT → (deadline) → bucket aggregation
+           → network exchange (all_to_all / ppermute) → [merge] → delay ring
+
+Two operating modes:
+
+* ``simplified`` — the paper's scaled-down prototype: the destination lookup
+  yields a bucket index directly, network addresses are statically
+  configured in the buckets, and **no temporal merging** is performed
+  (delivery scatters straight into the delay ring, which is order-free).
+* ``full`` — the complete scheme of [arXiv:2111.15296] this paper adapts:
+  dynamic bucket *renaming* (pool keyed by destination × time-window) and a
+  time-ordered merge stage at the destination, optionally rate-limited to
+  model merge congestion.
+
+The same code runs per-shard under ``shard_map`` (ShardMapTransport → real
+ICI collectives; this is what the dry-run lowers) and on a single device
+with a leading chip axis (LocalTransport; CPU tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import buckets as bk
+from repro.core import delays as dl
+from repro.core import events as ev
+from repro.core import merge as mg
+from repro.core import routing as rt
+from repro.core import transport as tp
+
+# On-wire cost model (bytes). A pulse event is 14-bit address + 8-bit
+# timestamp -> 3 bytes, padded to 4 on the 64-bit datapath; an Extoll packet
+# carries ~32 bytes of header+CRC framing. Used for wire-efficiency
+# accounting, not for simulation semantics.
+EVENT_BYTES = 4
+HEADER_BYTES = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class PulseCommConfig:
+    n_chips: int
+    neurons_per_chip: int = 512       # HICANN-X: 512 AdEx neurons
+    n_inputs_per_chip: int = 256      # synapse rows (input labels)
+    event_capacity: int = 256         # E: per-step event budget per chip
+    fanout: int = 1                   # routing-LUT fan-out K
+    bucket_capacity: int = 16         # C: events aggregated per packet
+    buckets_per_chip: int = 1         # streams (simplified) / pool (full)
+    ring_depth: int = 16              # delay-ring depth >= max axonal delay
+    mode: str = "simplified"          # "simplified" | "full"
+    merge_rate: int = 0               # full mode: events/step the merge emits
+    merge_depth: int = 64             # full mode: merge-queue depth
+    time_window: int = 4              # full mode: renaming window (steps)
+    use_pallas: bool = False          # bucket_pack kernel vs jnp reference
+
+    def __post_init__(self):
+        if self.mode not in ("simplified", "full"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if self.neurons_per_chip > (1 << ev.ADDR_BITS):
+            raise ValueError("neuron address exceeds 14-bit event format")
+
+    @property
+    def n_buckets(self) -> int:
+        return self.n_chips * self.buckets_per_chip
+
+    @property
+    def lanes_in(self) -> int:
+        """Incoming lanes per chip after exchange."""
+        return self.n_chips * self.buckets_per_chip * self.bucket_capacity
+
+
+class CommStats(NamedTuple):
+    """Per-step accounting (all per-chip; aggregate over chips upstream)."""
+
+    sent: jax.Array          # valid events offered to the network
+    overflow: jax.Array      # dropped at bucket packing (congestion)
+    merge_dropped: jax.Array  # dropped at merge buffer (full mode)
+    expired: jax.Array       # dropped at deposit (deadline passed/too far)
+    utilization: jax.Array   # mean bucket fill fraction
+    wire_bytes: jax.Array    # header + payload bytes injected
+    traffic: jax.Array       # [n_chips] events by destination chip
+
+
+class Delivered(NamedTuple):
+    """Post-exchange event lanes at the destination chip."""
+
+    addr: jax.Array      # int32[lanes]
+    deadline: jax.Array  # int32[lanes]
+    valid: jax.Array     # bool[lanes]
+
+
+def _pack(cfg: PulseCommConfig, bucket_id, addr, deadline, valid) -> bk.PackedBuckets:
+    if cfg.use_pallas:
+        from repro.kernels.bucket_pack import ops as bp_ops
+
+        return bp_ops.bucket_pack(
+            bucket_id, addr, deadline, valid,
+            n_buckets=cfg.n_buckets, capacity=cfg.bucket_capacity,
+        )
+    return bk.pack(
+        bucket_id, addr, deadline, valid,
+        n_buckets=cfg.n_buckets, capacity=cfg.bucket_capacity,
+    )
+
+
+def aggregate(cfg: PulseCommConfig, routed: rt.RoutedEvents) -> tuple[bk.PackedBuckets, jax.Array]:
+    """Stage 1-2 at the source: bucket assignment + packing.
+
+    Returns (packed slabs [n_buckets, C], traffic matrix [n_chips]).
+    """
+    if cfg.mode == "simplified":
+        bucket_id = bk.static_bucket_ids(
+            routed.dest_chip, n_chips=cfg.n_chips, streams=cfg.buckets_per_chip
+        )
+    else:
+        bucket_id = bk.dynamic_bucket_ids(
+            routed.dest_chip, routed.deadline,
+            n_chips=cfg.n_chips, pool_per_chip=cfg.buckets_per_chip,
+            window=cfg.time_window,
+        )
+    packed = _pack(cfg, bucket_id, routed.dest_addr, routed.deadline, routed.valid)
+    traffic = tp.exchange_matrix(routed.dest_chip, routed.valid, cfg.n_chips)
+    return packed, traffic
+
+
+def exchange(
+    cfg: PulseCommConfig, transport: tp.Transport, packed: bk.PackedBuckets
+) -> Delivered:
+    """Stage 3: route packets to their destination chips.
+
+    Packed slabs are laid out [n_chips, buckets_per_chip, C] so that
+    all_to_all delivers slab *d* of every source to chip *d*; after the
+    exchange the leading axis indexes the *source* chip.
+    """
+    shape = (cfg.n_chips, cfg.buckets_per_chip, cfg.bucket_capacity)
+    addr = transport.all_to_all(packed.addr.reshape(shape))
+    deadline = transport.all_to_all(packed.deadline.reshape(shape))
+    valid = transport.all_to_all(packed.valid.reshape(shape))
+    lanes = cfg.lanes_in
+    return Delivered(
+        addr=addr.reshape(lanes),
+        deadline=deadline.reshape(lanes),
+        valid=valid.reshape(lanes),
+    )
+
+
+def merge_delivered(cfg: PulseCommConfig, delivered: Delivered) -> Delivered:
+    """Stage 4 (full mode): time-ordered k-way merge of source streams."""
+    s = cfg.n_chips * cfg.buckets_per_chip
+    c = cfg.bucket_capacity
+    a, d, v = mg.merge_streams(
+        delivered.addr.reshape(s, c),
+        delivered.deadline.reshape(s, c),
+        delivered.valid.reshape(s, c),
+    )
+    return Delivered(addr=a, deadline=d, valid=v)
+
+
+def comm_step(
+    cfg: PulseCommConfig,
+    transport: tp.Transport,
+    events: ev.EventBuffer,
+    table: rt.RoutingTable,
+    ring: dl.DelayRing,
+) -> tuple[dl.DelayRing, Delivered, CommStats]:
+    """One full pulse-communication step for one chip (shard-local view).
+
+    Under shard_map every chip executes this simultaneously; with
+    LocalTransport, vmap it over the leading chip axis (see
+    :func:`multi_chip_step`).
+    """
+    routed = rt.route(events, table)
+    packed, traffic = aggregate(cfg, routed)
+    delivered = exchange(cfg, transport, packed)
+    merge_dropped = jnp.int32(0)
+    if cfg.mode == "full":
+        delivered = merge_delivered(cfg, delivered)
+        if cfg.merge_rate > 0:
+            # Rate-limited merge: only the first `merge_rate` events of the
+            # sorted stream are delivered this step; the remainder models the
+            # queue (bounded by merge_depth, surplus dropped).
+            lane = jnp.arange(cfg.lanes_in)
+            in_rate = delivered.valid & (lane < cfg.merge_rate)
+            queued = delivered.valid & (lane >= cfg.merge_rate)
+            n_queued = jnp.sum(queued.astype(jnp.int32))
+            merge_dropped = jnp.maximum(n_queued - cfg.merge_depth, 0)
+            delivered = Delivered(
+                addr=delivered.addr, deadline=delivered.deadline, valid=in_rate
+            )
+    new_ring, expired = dl.deposit(
+        ring, delivered.addr, delivered.deadline, delivered.valid
+    )
+    sent = jnp.sum(routed.valid.astype(jnp.int32))
+    n_packets = jnp.sum((packed.counts > 0).astype(jnp.int32))
+    payload = jnp.sum(jnp.minimum(packed.counts, cfg.bucket_capacity))
+    wire = n_packets * HEADER_BYTES + payload * EVENT_BYTES
+    stats = CommStats(
+        sent=sent,
+        overflow=packed.overflow,
+        merge_dropped=jnp.asarray(merge_dropped, jnp.int32),
+        expired=expired,
+        utilization=packed.utilization(),
+        wire_bytes=wire.astype(jnp.int32),
+        traffic=traffic,
+    )
+    return new_ring, delivered, stats
+
+
+def multi_chip_step(
+    cfg: PulseCommConfig,
+    events: ev.EventBuffer,     # leading chip axis [n_chips, E]
+    table: rt.RoutingTable,     # [n_chips, N, K] (per-chip LUTs)
+    rings: dl.DelayRing,        # [n_chips, D, n_inputs]
+) -> tuple[dl.DelayRing, Delivered, CommStats]:
+    """Single-device multi-chip step (LocalTransport semantics).
+
+    The exchange needs cross-chip data, so it cannot be a plain vmap: we
+    vmap route+aggregate, transpose the packed slabs (the LocalTransport
+    all_to_all), then vmap delivery.
+    """
+    transport = tp.LocalTransport(n_chips=cfg.n_chips)
+
+    routed = jax.vmap(rt.route)(events, table)
+    packed, traffic = jax.vmap(lambda r: aggregate(cfg, r))(routed)
+
+    shape = (cfg.n_chips, cfg.n_chips, cfg.buckets_per_chip, cfg.bucket_capacity)
+    addr = transport.all_to_all(packed.addr.reshape(shape))
+    dead = transport.all_to_all(packed.deadline.reshape(shape))
+    val = transport.all_to_all(packed.valid.reshape(shape))
+    lanes = cfg.lanes_in
+    delivered = Delivered(
+        addr=addr.reshape(cfg.n_chips, lanes),
+        deadline=dead.reshape(cfg.n_chips, lanes),
+        valid=val.reshape(cfg.n_chips, lanes),
+    )
+    if cfg.mode == "full":
+        delivered = jax.vmap(lambda d: merge_delivered(cfg, d))(delivered)
+
+    new_rings, expired = jax.vmap(
+        lambda r, d: dl.deposit(r, d.addr, d.deadline, d.valid)
+    )(rings, delivered)
+
+    sent = jax.vmap(lambda r: jnp.sum(r.valid.astype(jnp.int32)))(routed)
+    n_packets = jnp.sum((packed.counts > 0).astype(jnp.int32), axis=-1)
+    payload = jnp.sum(jnp.minimum(packed.counts, cfg.bucket_capacity), axis=-1)
+    stats = CommStats(
+        sent=sent,
+        overflow=packed.overflow,
+        merge_dropped=jnp.zeros_like(sent),
+        expired=expired,
+        utilization=jax.vmap(bk.PackedBuckets.utilization)(packed),
+        wire_bytes=(n_packets * HEADER_BYTES + payload * EVENT_BYTES).astype(jnp.int32),
+        traffic=traffic,
+    )
+    return new_rings, delivered, stats

@@ -1,0 +1,174 @@
+"""Destination lookup tables (the paper's source-node routing LUT).
+
+At the source node, every emitted event's 14-bit neuron address indexes a
+lookup table.  In the paper's *simplified* scheme the lookup yields a
+**bucket index** (buckets are statically bound to network destinations) plus
+a **freely remappable destination neuron address**; in the full scheme of
+[Thommes et al. 2021, arXiv:2111.15296] it yields a GUID for multicast.
+
+We implement the LUT as gatherable arrays with an explicit fan-out axis ``K``
+(K=1 reproduces the paper's single-destination simplified mode; K>1 gives the
+multicast of the full scheme).  Each (source neuron, k) entry holds:
+
+  dest_chip : which chip (mesh shard) the event must reach
+  dest_addr : remapped destination neuron address on that chip
+  delay     : modeled axonal delay in simulation steps (added to the
+              timestamp to form the arrival deadline)
+  valid     : entry enabled
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events as ev
+
+
+class RoutingTable(NamedTuple):
+    """Per-source-neuron routing entries with fan-out K.
+
+    All arrays are [n_neurons, K].
+    """
+
+    dest_chip: jax.Array  # int32
+    dest_addr: jax.Array  # int32
+    delay: jax.Array      # int32 (>= 1)
+    valid: jax.Array      # bool
+
+    @property
+    def n_neurons(self) -> int:
+        return self.dest_chip.shape[0]
+
+    @property
+    def fanout(self) -> int:
+        return self.dest_chip.shape[1]
+
+
+class RoutedEvents(NamedTuple):
+    """Events after LUT expansion: one lane per (event, fan-out) pair.
+
+    All arrays are [E * K].
+    """
+
+    dest_chip: jax.Array
+    dest_addr: jax.Array
+    deadline: jax.Array
+    valid: jax.Array
+
+
+def route(events: ev.EventBuffer, table: RoutingTable) -> RoutedEvents:
+    """Expand events through the routing LUT (gather + deadline computation)."""
+    addr = jnp.where(events.valid, events.addr, 0)
+    dest_chip = table.dest_chip[addr]          # [E, K]
+    dest_addr = table.dest_addr[addr]          # [E, K]
+    delay = table.delay[addr]                  # [E, K]
+    entry_valid = table.valid[addr]            # [E, K]
+    valid = entry_valid & events.valid[:, None]
+    deadline = events.time[:, None] + delay
+    flat = lambda x: x.reshape(-1)
+    return RoutedEvents(
+        dest_chip=flat(jnp.where(valid, dest_chip, 0)).astype(jnp.int32),
+        dest_addr=flat(jnp.where(valid, dest_addr, ev.ADDR_SENTINEL)).astype(jnp.int32),
+        deadline=flat(deadline).astype(jnp.int32),
+        valid=flat(valid),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Table builders
+# ---------------------------------------------------------------------------
+
+def feedforward_table(
+    n_neurons: int,
+    *,
+    src_chip: int,
+    dst_chip: int,
+    delay: int = 2,
+    remap_offset: int = 0,
+) -> RoutingTable:
+    """The paper's demo topology: population on chip A projects 1:1 (with a
+    freely remappable address offset) onto chip B."""
+    dest_chip = np.full((n_neurons, 1), dst_chip, dtype=np.int32)
+    dest_addr = ((np.arange(n_neurons) + remap_offset) % n_neurons).reshape(-1, 1)
+    delays = np.full((n_neurons, 1), delay, dtype=np.int32)
+    valid = np.ones((n_neurons, 1), dtype=bool)
+    del src_chip  # kept for call-site readability
+    return RoutingTable(
+        dest_chip=jnp.asarray(dest_chip),
+        dest_addr=jnp.asarray(dest_addr, dtype=jnp.int32),
+        delay=jnp.asarray(delays),
+        valid=jnp.asarray(valid),
+    )
+
+
+def random_table(
+    key: jax.Array,
+    n_neurons: int,
+    n_chips: int,
+    *,
+    fanout: int = 1,
+    max_delay: int = 8,
+    min_delay: int = 1,
+    p_valid: float = 1.0,
+) -> RoutingTable:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    shape = (n_neurons, fanout)
+    return RoutingTable(
+        dest_chip=jax.random.randint(k1, shape, 0, n_chips, dtype=jnp.int32),
+        dest_addr=jax.random.randint(k2, shape, 0, n_neurons, dtype=jnp.int32),
+        delay=jax.random.randint(k3, shape, min_delay, max_delay + 1, dtype=jnp.int32),
+        valid=jax.random.uniform(k4, shape) < p_valid,
+    )
+
+
+def from_connection_list(
+    connections: np.ndarray,
+    n_neurons: int,
+    *,
+    max_fanout: int | None = None,
+    default_delay: int = 1,
+) -> RoutingTable:
+    """Build a LUT from an explicit connection list.
+
+    ``connections`` rows: (src_addr, dest_chip, dest_addr[, delay]).
+    Rows beyond ``max_fanout`` per source are rejected with ValueError —
+    the BSS-2 LUT has a fixed fan-out budget per source address.
+    """
+    connections = np.asarray(connections)
+    if connections.ndim != 2 or connections.shape[1] not in (3, 4):
+        raise ValueError("connections must be [n, 3|4]")
+    counts = np.zeros(n_neurons, dtype=np.int64)
+    for row in connections:
+        counts[int(row[0])] += 1
+    fanout = int(counts.max()) if len(connections) else 1
+    fanout = max(fanout, 1)
+    if max_fanout is not None:
+        if fanout > max_fanout:
+            raise ValueError(
+                f"source fan-out {fanout} exceeds LUT budget {max_fanout}"
+            )
+        fanout = max_fanout
+    dest_chip = np.zeros((n_neurons, fanout), dtype=np.int32)
+    dest_addr = np.full((n_neurons, fanout), ev.ADDR_SENTINEL, dtype=np.int32)
+    delay = np.full((n_neurons, fanout), default_delay, dtype=np.int32)
+    valid = np.zeros((n_neurons, fanout), dtype=bool)
+    slot = np.zeros(n_neurons, dtype=np.int64)
+    for row in connections:
+        s = int(row[0])
+        j = slot[s]
+        dest_chip[s, j] = int(row[1])
+        dest_addr[s, j] = int(row[2])
+        if connections.shape[1] == 4:
+            delay[s, j] = int(row[3])
+        valid[s, j] = True
+        slot[s] += 1
+    return RoutingTable(
+        dest_chip=jnp.asarray(dest_chip),
+        dest_addr=jnp.asarray(dest_addr),
+        delay=jnp.asarray(delay),
+        valid=jnp.asarray(valid),
+    )

@@ -1,0 +1,140 @@
+"""Transport layer: the Extoll/Tourmalet analogue on a TPU mesh.
+
+Extoll routes packets between nodes of a 3D torus by 16-bit node address;
+TPU ICI is likewise a torus, and the routed-exchange primitive is
+``all_to_all`` (every chip sends one bucket slab to every other chip), while
+a point-to-point RDMA *put* is ``ppermute``.  This module hides the
+difference between:
+
+* ``ShardMapTransport`` — real collectives over a named mesh axis, for use
+  inside ``shard_map`` (this is what the dry-run lowers to ICI collectives);
+* ``LocalTransport``   — the same dataflow on a single device with an
+  explicit leading chip axis (exchange == transpose of the two chip axes),
+  used by CPU tests and small examples.  Both are numerically identical,
+  which is property-tested.
+
+A hierarchical two-stage exchange (pod-local all_to_all, then cross-pod)
+is provided for the multi-pod mesh — packets cross the slow inter-pod link
+exactly once, pre-aggregated, mirroring Extoll's dimension-ordered torus
+routing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+
+class Transport(Protocol):
+    n_chips: int
+
+    def all_to_all(self, x: jax.Array) -> jax.Array: ...
+    def put(self, x: jax.Array, perm: list[tuple[int, int]]) -> jax.Array: ...
+    def psum(self, x: jax.Array) -> jax.Array: ...
+    def chip_index(self) -> jax.Array: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardMapTransport:
+    """Collectives over mesh axis(es) — call inside shard_map.
+
+    ``axis`` may be a single axis name or a tuple (e.g. ("pod", "model")) —
+    for tuples, all_to_all is performed hierarchically: innermost axis first
+    (cheap pod-local links), then outer (expensive cross-pod), so cross-pod
+    traffic is already aggregated.
+    """
+
+    axis: str | tuple[str, ...]
+    n_chips: int
+
+    def _axes(self) -> tuple[str, ...]:
+        return (self.axis,) if isinstance(self.axis, str) else tuple(self.axis)
+
+    def all_to_all(self, x: jax.Array) -> jax.Array:
+        # x: [n_chips_local_view, ...] where leading dim == total chips on
+        # the exchange axes.  Per-device in shard_map, leading dim is the
+        # full n_chips (each device holds one slab per destination).
+        axes = self._axes()
+        if len(axes) == 1:
+            return jax.lax.all_to_all(
+                x, axes[0], split_axis=0, concat_axis=0, tiled=True
+            )
+        # Hierarchical: reshape leading dim [P, Q, ...] for axes (pod, inner):
+        p = jax.lax.axis_size(axes[0])
+        q = x.shape[0] // p
+        y = x.reshape((p, q) + x.shape[1:])
+        # Stage 1: inner-axis exchange of each pod-block (pod-local links).
+        y = jax.lax.all_to_all(y, axes[1], split_axis=1, concat_axis=1, tiled=True)
+        # Stage 2: cross-pod exchange, one aggregated slab per pod.
+        y = jax.lax.all_to_all(y, axes[0], split_axis=0, concat_axis=0, tiled=True)
+        return y.reshape((p * q,) + x.shape[1:])
+
+    def put(self, x: jax.Array, perm: list[tuple[int, int]]) -> jax.Array:
+        axes = self._axes()
+        if len(axes) != 1:
+            raise ValueError("point-to-point put is single-axis")
+        return jax.lax.ppermute(x, axes[0], perm)
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return jax.lax.psum(x, self._axes())
+
+    def chip_index(self) -> jax.Array:
+        axes = self._axes()
+        idx = jax.lax.axis_index(axes[0])
+        for a in axes[1:]:
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        return idx
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalTransport:
+    """Single-device emulation with an explicit leading chip axis.
+
+    Arrays are [n_chips, n_chips, ...]: (holder, destination_slab, ...).
+    all_to_all == swap of the two leading axes.  Used by CPU tests; equality
+    with ShardMapTransport is property-tested in tests/test_transport.py.
+    """
+
+    n_chips: int
+
+    def all_to_all(self, x: jax.Array) -> jax.Array:
+        return jnp.swapaxes(x, 0, 1)
+
+    def put(self, x: jax.Array, perm: list[tuple[int, int]]) -> jax.Array:
+        out = jnp.zeros_like(x)
+        for src, dst in perm:
+            out = out.at[dst].set(x[src])
+        return out
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return jnp.sum(x, axis=0, keepdims=True) * jnp.ones_like(x[:1])
+
+    def chip_index(self) -> jax.Array:
+        return jnp.arange(self.n_chips)
+
+
+# ---------------------------------------------------------------------------
+# Collective-cost estimators (used by the roofline harness)
+# ---------------------------------------------------------------------------
+
+def all_to_all_bytes(slab_bytes_per_pair: int, n_chips: int) -> int:
+    """Bytes each chip injects for a full exchange (one slab per peer)."""
+    return slab_bytes_per_pair * (n_chips - 1)
+
+
+def ring_put_bytes(slab_bytes: int) -> int:
+    return slab_bytes
+
+
+@partial(jax.jit, static_argnames=("n_chips",))
+def exchange_matrix(dest_chip: jax.Array, valid: jax.Array, n_chips: int):
+    """Traffic matrix [n_chips] of event counts by destination — the
+    per-step message-rate observable."""
+    onehot = (
+        (dest_chip[:, None] == jnp.arange(n_chips)[None, :]) & valid[:, None]
+    )
+    return jnp.sum(onehot.astype(jnp.int32), axis=0)

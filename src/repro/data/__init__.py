@@ -1,0 +1,3 @@
+from repro.data.pipeline import Prefetcher, batch_at, poisson_inputs, stream
+
+__all__ = ["Prefetcher", "batch_at", "poisson_inputs", "stream"]

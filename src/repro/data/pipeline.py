@@ -1,0 +1,88 @@
+"""Data pipeline: deterministic synthetic streams + background prefetch.
+
+Determinism is the fault-tolerance contract: ``batch_at(seed, step)`` is a
+pure function, so a restart at step N replays exactly the batches an
+uninterrupted run would have seen (no data-loader state to checkpoint beyond
+the step counter), and any straggling/failed host can be re-fed exactly.
+
+The prefetcher is the host-side analogue of the paper's host ring buffer:
+a bounded queue between a producer thread and the accelerator consumer —
+the credit-based flow control is literally ``queue.Queue(maxsize=depth)``
+(back-pressure on full, stall on empty), cf. repro.core.flowcontrol.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def batch_at(cfg: ArchConfig, shape: ShapeConfig, seed: int, step: int,
+             *, batch_override: int | None = None) -> dict:
+    """Pure function (seed, step) -> host batch (numpy)."""
+    rng = np.random.default_rng(np.uint64(seed * 1_000_003 + step))
+    gb = batch_override or shape.global_batch
+    s = shape.seq_len
+    if cfg.is_encdec:
+        frames = rng.standard_normal((gb, s, cfg.d_model), dtype=np.float32)
+        toks = rng.integers(0, cfg.vocab_size, (gb, cfg.max_target_len + 1),
+                            dtype=np.int32)
+        return {"frames": frames, "tokens": toks[:, :-1],
+                "targets": toks[:, 1:]}
+    toks = rng.integers(0, cfg.vocab_size, (gb, s + 1), dtype=np.int32)
+    return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+def stream(cfg: ArchConfig, shape: ShapeConfig, seed: int,
+           start_step: int = 0, **kw) -> Iterator[tuple[int, dict]]:
+    step = start_step
+    while True:
+        yield step, batch_at(cfg, shape, seed, step, **kw)
+        step += 1
+
+
+class Prefetcher:
+    """Bounded background prefetch + device placement.
+
+    depth = the credit count; a slow host (straggler) is absorbed up to
+    ``depth`` steps before the accelerator stalls.
+    """
+
+    def __init__(self, it: Iterator[Any], *, depth: int = 2,
+                 place: Callable[[Any], Any] | None = None):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._place = place or (lambda b: jax.tree.map(jax.numpy.asarray, b))
+        self._it = it
+        self._done = object()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        step, batch = item
+        return step, self._place(batch)
+
+
+def poisson_inputs(key, n_steps: int, n_chips: int, n_inputs: int,
+                   rate: float) -> np.ndarray:
+    """Spike-source stream for SNN experiments: [T, n_chips, n_inputs]."""
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31)))
+    return (rng.random((n_steps, n_chips, n_inputs)) < rate).astype(np.float32)

@@ -1,0 +1,13 @@
+"""repro.kernels — Pallas TPU kernels for the compute hot spots.
+
+Each kernel is a subpackage: kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper, interpret=True off-TPU), ref.py (pure-jnp
+oracle).  Tests sweep shapes/dtypes and assert_allclose against the oracle.
+
+  bucket_pack     — the paper's event-aggregation hot path
+  lif_step        — fused LIF neuron update (SNN inner loop)
+  flash_attention — fused GQA attention (LM prefill/train)
+  ssm_scan        — selective-SSM recurrence (Mamba archs, long context)
+"""
+
+__all__ = ["bucket_pack", "lif_step", "flash_attention", "ssm_scan"]

@@ -1,0 +1,52 @@
+"""jit'd public wrapper for the bucket_pack kernel.
+
+Pads the event stream to the kernel tile size, invokes the Pallas kernel
+(interpret=True off-TPU so the kernel body executes on CPU for validation),
+and re-assembles the PackedBuckets structure used across repro.core.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import buckets as bk
+from repro.kernels.bucket_pack.kernel import E_TILE, bucket_pack_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "capacity", "interpret"))
+def bucket_pack(
+    bucket_id: jax.Array,
+    addr: jax.Array,
+    deadline: jax.Array,
+    valid: jax.Array,
+    *,
+    n_buckets: int,
+    capacity: int,
+    interpret: bool | None = None,
+) -> bk.PackedBuckets:
+    if interpret is None:
+        interpret = not _on_tpu()
+    e = bucket_id.shape[0]
+    pad = (-e) % E_TILE
+    if pad:
+        zi = lambda x: jnp.pad(x.astype(jnp.int32), (0, pad))
+        bucket_id, addr, deadline = zi(bucket_id), zi(addr), zi(deadline)
+        valid = jnp.pad(valid.astype(jnp.int32), (0, pad))
+    a, d, v, counts, overflow = bucket_pack_pallas(
+        bucket_id, addr, deadline, valid,
+        n_buckets=n_buckets, capacity=capacity, interpret=interpret,
+    )
+    return bk.PackedBuckets(
+        addr=a,
+        deadline=d,
+        valid=v != 0,
+        counts=counts[:, 0],
+        overflow=jnp.sum(overflow).astype(jnp.int32),
+    )

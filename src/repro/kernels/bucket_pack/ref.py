@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the bucket_pack kernel.
+
+Delegates to repro.core.buckets.pack — the reference semantics of the
+paper's bucket-buffer aggregation (stable FIFO packing, overflow drop).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import buckets as bk
+
+
+def bucket_pack_ref(
+    bucket_id: jax.Array,
+    addr: jax.Array,
+    deadline: jax.Array,
+    valid: jax.Array,
+    *,
+    n_buckets: int,
+    capacity: int,
+) -> bk.PackedBuckets:
+    return bk.pack(
+        bucket_id, addr, deadline, valid, n_buckets=n_buckets, capacity=capacity
+    )

@@ -1,0 +1,68 @@
+"""jit'd public wrapper for flash attention.
+
+Pads Sq/Skv to block multiples (masking padded keys via kv_len), dispatches
+to the Pallas kernel (interpret off-TPU), and slices the result back.  Falls
+back to the jnp oracle for tiny shapes where blocking is pure overhead
+(e.g. single-token decode — that path is gather-bound, not MXU-bound).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
+    flash_attention_pallas,
+)
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "q_offset", "block_q", "block_k",
+                     "interpret", "force_kernel"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool | None = None,
+    force_kernel: bool = False,
+) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+
+    # Tiny shapes (decode): blocked kernel is pure overhead.
+    if not force_kernel and (sq < block_q or skv < block_k):
+        return attention_ref(q, k, v, causal=causal, scale=scale,
+                             kv_len=skv, q_offset=q_offset)
+
+    pad_q = (-sq) % block_q
+    pad_k = (-skv) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else v
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, scale=scale, kv_len=skv,
+        block_q=block_q, block_k=block_k, q_offset=q_offset,
+        interpret=interpret,
+    )
+    return out[:, :, :sq, :]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for flash attention: exact softmax attention with GQA
+head grouping, causal masking, and key-length masking."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,  # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    kv_len: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    skv = k.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * scale
+    neg = jnp.finfo(jnp.float32).min
+    if kv_len is not None:
+        kmask = jnp.arange(skv) < kv_len
+        scores = jnp.where(kmask[None, None, None, :], scores, neg)
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(skv)[None, :]
+        scores = jnp.where(qi >= ki, scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.lif_step import ops, ref
+from repro.kernels.lif_step.ops import lif_step
+
+__all__ = ["ops", "ref", "lif_step"]

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused LIF membrane update (SNN inner-loop hot spot).
+
+Pure VPU elementwise work: leak-decay + current integration + threshold +
+reset + refractory bookkeeping in a single VMEM pass (7 HBM streams in, 3
+out — the fusion keeps the working set in VMEM instead of 6 separate XLA
+elementwise kernels).
+
+Grid: 1-D over neuron blocks of ``BLOCK`` (multiple of 8*128 for f32 vector
+registers).  The batch/population dimension is folded into the block axis by
+ops.py (everything is elementwise).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024  # 8 sublanes x 128 lanes
+
+
+def _kernel(v_ref, refrac_ref, cur_ref, tau_ref, vth_ref, vreset_ref,
+            vrest_ref, refp_ref, v_out_ref, refrac_out_ref, spk_out_ref):
+    v = v_ref[...]
+    refrac = refrac_ref[...]
+    cur = cur_ref[...]
+    tau = tau_ref[...]
+    v_th = vth_ref[...]
+    v_reset = vreset_ref[...]
+    v_rest = vrest_ref[...]
+    refp = refp_ref[...]
+
+    decay = jnp.exp(-1.0 / tau)
+    active = refrac <= 0
+    v_int = jnp.where(active, v_rest + decay * (v - v_rest) + cur, v)
+    spk = jnp.logical_and(v_int > v_th, active)
+    v_out_ref[...] = jnp.where(spk, v_reset, v_int)
+    refrac_out_ref[...] = jnp.where(spk, refp, jnp.maximum(refrac - 1, 0))
+    spk_out_ref[...] = spk.astype(v.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lif_step_pallas(v, refrac, current, tau_m, v_th, v_reset, v_rest,
+                    refrac_period, *, interpret: bool = False):
+    """Inputs are flat [n] arrays with n % BLOCK == 0 (ops.py pads)."""
+    n = v.shape[0]
+    if n % BLOCK != 0:
+        raise ValueError(f"n={n} must be a multiple of {BLOCK}")
+    grid = (n // BLOCK,)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    out_shape = (
+        jax.ShapeDtypeStruct((n,), v.dtype),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), v.dtype),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec] * 8,
+        out_specs=(spec, spec, spec),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(v, refrac.astype(jnp.int32), current, tau_m, v_th, v_reset, v_rest,
+      refrac_period.astype(jnp.int32))

@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the lif_step kernel: flattens/pads arbitrary
+neuron-array shapes, runs the fused Pallas kernel, restores shapes."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lif_step.kernel import BLOCK, lif_step_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lif_step(v, refrac, current, tau_m, v_th, v_reset, v_rest, refrac_period,
+             *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = v.shape
+    flat = lambda x, dt: jnp.broadcast_to(x, shape).astype(dt).reshape(-1)
+    args = [flat(v, jnp.float32), flat(refrac, jnp.int32), flat(current, jnp.float32),
+            flat(tau_m, jnp.float32), flat(v_th, jnp.float32),
+            flat(v_reset, jnp.float32), flat(v_rest, jnp.float32),
+            flat(refrac_period, jnp.int32)]
+    n = args[0].shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        args = [jnp.pad(a, (0, pad), constant_values=(1 if i == 3 else 0))
+                for i, a in enumerate(args)]  # tau padded with 1 (avoid /0)
+    v_new, refrac_new, spk = lif_step_pallas(*args, interpret=interpret)
+    unflat = lambda x: x[:n].reshape(shape)
+    return unflat(v_new), unflat(refrac_new), unflat(spk)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the lif_step kernel: repro.snn.neuron.lif_step
+without the surrogate-gradient wrapper (forward semantics only)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lif_step_ref(v, refrac, current, tau_m, v_th, v_reset, v_rest, refrac_period):
+    decay = jnp.exp(-1.0 / tau_m)
+    active = refrac <= 0
+    v_int = jnp.where(active, v_rest + decay * (v - v_rest) + current, v)
+    spikes = ((v_int - v_th) > 0).astype(v.dtype) * active.astype(v.dtype)
+    spiked = spikes > 0.5
+    v_new = jnp.where(spiked, v_reset, v_int)
+    refrac_new = jnp.where(spiked, refrac_period, jnp.maximum(refrac - 1, 0))
+    return v_new, refrac_new.astype(jnp.int32), spikes

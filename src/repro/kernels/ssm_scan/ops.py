@@ -1,0 +1,44 @@
+"""jit'd public wrapper for the SSM scan: pads T/Din to block multiples
+(dt=0 padding steps are identity updates: exp(0)*h + 0), dispatches to the
+Pallas kernel (interpret off-TPU), slices back."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import BLOCK_D, BLOCK_T, ssm_scan_pallas
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "block_d", "block_t", "force_kernel")
+)
+def ssm_scan(x, dt, A, Bm, Cm, D, *, interpret: bool | None = None,
+             block_d: int = BLOCK_D, block_t: int = BLOCK_T,
+             force_kernel: bool = False):
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, t, din = x.shape
+    if not force_kernel and (t < block_t and din < block_d):
+        return ssm_scan_ref(x, dt, A, Bm, Cm, D)
+    pad_t = (-t) % block_t
+    pad_d = (-din) % block_d
+    if pad_t or pad_d:
+        pt = ((0, 0), (0, pad_t), (0, 0))
+        pd = ((0, 0), (0, 0), (0, pad_d))
+        x = jnp.pad(jnp.pad(x, pt), pd)
+        dt = jnp.pad(jnp.pad(dt, pt), pd)     # dt=0 -> identity step
+        Bm = jnp.pad(Bm, pt)
+        Cm = jnp.pad(Cm, pt)
+        A = jnp.pad(A, ((0, pad_d), (0, 0)))
+        D = jnp.pad(D, (0, pad_d))
+    y = ssm_scan_pallas(x, dt, A, Bm, Cm, D, interpret=interpret,
+                        block_d=block_d, block_t=block_t)
+    return y[:, :t, :din]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the selective-SSM scan (Mamba-1 recurrence).
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t
+    y_t = C_t . h_t + D * x_t
+
+Shapes: x/dt [B, T, Din], A [Din, N], Bm/Cm [B, T, N], D [Din].
+Mamba-2 (SSD) is the same recurrence with A[d, :] constant per head —
+callers broadcast, so one oracle covers both.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, dt, A, Bm, Cm, D):
+    def scan_one(x_b, dt_b, B_b, C_b):
+        def step(h, inp):
+            x_t, dt_t, b_t, c_t = inp
+            decay = jnp.exp(dt_t[:, None] * A)              # [Din, N]
+            h = decay * h + (dt_t * x_t)[:, None] * b_t[None, :]
+            y = jnp.sum(h * c_t[None, :], axis=1) + D * x_t  # [Din]
+            return h, y
+
+        h0 = jnp.zeros((x_b.shape[1], A.shape[1]), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (x_b, dt_b, B_b, C_b))
+        return ys
+
+    return jax.vmap(scan_one)(
+        x.astype(jnp.float32), dt.astype(jnp.float32),
+        Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+    ).astype(x.dtype)

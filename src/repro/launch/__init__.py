@@ -1,0 +1,1 @@
+"""repro.launch — mesh construction, multi-pod dry-run, train/serve drivers."""

@@ -1,0 +1,329 @@
+"""Loop-aware HLO analysis: FLOPs / HBM bytes / collective bytes per device.
+
+``compiled.cost_analysis()`` counts each while-loop *body* once — a
+scan-over-layers model therefore under-reports by the trip count.  This
+module parses the optimized HLO text, builds the computation call graph
+(while bodies x known_trip_count, fusions, calls, conditionals) and
+evaluates totals recursively from ENTRY:
+
+  * flops            — dot (2·M·N·K·batch) and convolution ops
+  * hbm_bytes        — Σ over top-level ops of (result + operand bytes):
+                       the same "every op round-trips HBM" model XLA's own
+                       cost analysis uses, now loop-aware
+  * collective_bytes — per collective kind (all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute),
+                       result-shape bytes (max of operand/result for
+                       all-reduce), loop-aware
+
+The HLO is the per-device SPMD program, so all numbers are per device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]{1,2}\d+(?:e\dm\d\w*)?|pred)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\\"]*:\s*\{[\\\"]*n[\\\"]*:[\\\"]*(\d+)')
+
+
+def _shapes_in(s: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(s: str) -> int:
+    total = 0
+    for dt, shape in _shapes_in(s):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    rhs: str
+    result_str: str   # result type portion
+    kind: str         # opcode-ish
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    shapes: dict      # op name -> result type string
+
+
+def parse_computations(text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            st_line = line.strip()
+            m = _COMP_HDR_RE.match(st_line)
+            if (m and st_line.endswith("{") and "->" in st_line
+                    and "=" not in st_line.split("->")[0].split("(")[0]):
+                cur = Computation(name=m.group(1), ops=[], shapes={})
+                if st_line.startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        st = line.strip()
+        if st == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # split "TYPE op(...)" — find the opcode: first token after the
+        # result type(s).  Result types end at the last ']' or ')' before
+        # the opcode word followed by '('.
+        om = re.search(r"\b([a-z][\w\-]*)\(", rhs)
+        kind = om.group(1) if om else "unknown"
+        result_str = rhs[: om.start()] if om else rhs
+        cur.ops.append(Op(name=name, rhs=rhs, result_str=result_str, kind=kind))
+        cur.shapes[name] = result_str
+    return comps, entry
+
+
+def _dot_flops(op: Op, shapes: dict) -> float:
+    res = _shapes_in(op.result_str)
+    if not res:
+        return 0.0
+    _, out_shape = res[0]
+    out_n = 1
+    for d in out_shape:
+        out_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rhs)
+    operands = _OPERAND_RE.findall(
+        op.rhs[op.rhs.index("("): op.rhs.index(")") + 1]
+        if "(" in op.rhs else op.rhs
+    )
+    k = 1
+    if m and operands:
+        lhs_name = operands[0]
+        lhs_str = shapes.get(lhs_name, "")
+        lhs_shapes = _shapes_in(lhs_str)
+        if lhs_shapes:
+            lhs_shape = lhs_shapes[0][1]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(lhs_shape):
+                    k *= lhs_shape[int(idx)]
+    return 2.0 * out_n * k
+
+
+def _conv_flops(op: Op, shapes: dict) -> float:
+    res = _shapes_in(op.result_str)
+    if not res:
+        return 0.0
+    _, out_shape = res[0]
+    out_n = 1
+    for d in out_shape:
+        out_n *= d
+    operands = _OPERAND_RE.findall(op.rhs)
+    k = 1
+    if len(operands) >= 2:
+        rhs_shapes = _shapes_in(shapes.get(operands[1], ""))
+        if rhs_shapes:
+            for d in rhs_shapes[0][1][:-1]:   # kernel spatial x in-ch/group
+                k *= d
+    g = 1
+    gm = re.search(r"feature_group_count=(\d+)", op.rhs)
+    if gm:
+        g = int(gm.group(1))
+    return 2.0 * out_n * max(k // max(g, 1), 1)
+
+
+def _callees(op: Op) -> list[tuple[str, float]]:
+    """(callee computation, multiplier) pairs for this op."""
+    out = []
+    if op.kind == "while":
+        bm = re.search(r"body=%?([\w.\-]+)", op.rhs)
+        trip = 1.0
+        tm = _TRIP_RE.search(op.rhs)
+        if tm:
+            trip = float(tm.group(1))
+        if bm:
+            out.append((bm.group(1), trip))
+    elif op.kind == "fusion":
+        cm = re.search(r"calls=%?([\w.\-]+)", op.rhs)
+        if cm:
+            out.append((cm.group(1), 1.0))
+    elif op.kind in ("call", "custom-call", "async-start"):
+        cm = re.search(r"to_apply=%?([\w.\-]+)", op.rhs)
+        if cm:
+            out.append((cm.group(1), 1.0))
+    elif op.kind == "conditional":
+        for cm in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                              r"(?:true|false)_computation=%?([\w.\-]+))",
+                              op.rhs):
+            blob = cm.group(1) or cm.group(2) or ""
+            for name in re.findall(r"%?([\w.\-]+)", blob):
+                out.append((name, 1.0))
+    return out
+
+
+@dataclasses.dataclass
+class Stats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    unknown_trip_whiles: int = 0
+
+    def add(self, other: "Stats", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k in COLLECTIVES:
+            self.collective_bytes[k] += other.collective_bytes[k] * mult
+            self.collective_counts[k] += other.collective_counts[k] * mult
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_SKIP_BYTES_KINDS = {"parameter", "constant", "tuple", "get-tuple-element",
+                     "bitcast", "while", "call", "conditional"}
+
+
+def _dus_update_bytes(comp: Computation) -> int | None:
+    """If this (fusion body) computation is an in-place slice update, return
+    the bytes of the updated slice: a dynamic-update-slice whose buffer is a
+    computation parameter only streams the slice through HBM, not the whole
+    buffer (XLA does the update in place)."""
+    for op in comp.ops:
+        if op.kind == "dynamic-update-slice":
+            inner = op.rhs[op.rhs.find("("):]
+            names = _OPERAND_RE.findall(inner)
+            if len(names) >= 2 and names[1] in comp.shapes:
+                return _nbytes(comp.shapes[names[1]])
+    return None
+
+
+def _local_stats(comp: Computation, is_fusion_body: bool,
+                 dus_map: dict | None = None) -> Stats:
+    st = Stats()
+    dus_map = dus_map or {}
+    for op in comp.ops:
+        if op.kind == "dot":
+            st.flops += _dot_flops(op, comp.shapes)
+        elif op.kind == "convolution":
+            st.flops += _conv_flops(op, comp.shapes)
+        kind_n = op.kind
+        coll = None
+        for c in COLLECTIVES:
+            if kind_n == c or kind_n == c + "-start":
+                coll = c
+                break
+        if coll:
+            rb = _nbytes(op.result_str)
+            # operand bytes (inline types in the operand list, if present)
+            inner = op.rhs[op.rhs.find("("):]
+            ob = _nbytes(inner)
+            val = max(rb, ob) if coll == "all-reduce" else (rb or ob)
+            st.collective_bytes[coll] += val
+            st.collective_counts[coll] += 1
+        if not is_fusion_body and op.kind not in _SKIP_BYTES_KINDS:
+            result_b = _nbytes(op.result_str)
+            inner = op.rhs[op.rhs.find("("):] if "(" in op.rhs else ""
+            operand_names = [nm for nm in _OPERAND_RE.findall(inner)
+                             if nm in comp.shapes]
+            update_b = None
+            if op.kind == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", op.rhs)
+                if cm and cm.group(1) in dus_map:
+                    update_b = dus_map[cm.group(1)]
+            elif op.kind == "dynamic-update-slice" and len(operand_names) >= 2:
+                update_b = _nbytes(comp.shapes[operand_names[1]])
+            if update_b is not None:
+                # in-place update: slice in + slice out; skip the one
+                # pass-through buffer operand that matches the result size
+                skipped_buffer = False
+                b = 2 * update_b
+                for nm in operand_names:
+                    ob = _nbytes(comp.shapes[nm])
+                    if not skipped_buffer and ob == result_b:
+                        skipped_buffer = True
+                        continue
+                    b += ob
+                st.hbm_bytes += b
+            elif op.kind == "dynamic-slice":
+                st.hbm_bytes += 2 * result_b
+            else:
+                st.hbm_bytes += result_b
+                for nm in operand_names:
+                    st.hbm_bytes += _nbytes(comp.shapes[nm])
+        if op.kind == "while" and not _TRIP_RE.search(op.rhs):
+            st.unknown_trip_whiles += 1
+    return st
+
+
+def analyze(text: str) -> Stats:
+    comps, entry = parse_computations(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    fusion_bodies = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", op.rhs)
+                if cm:
+                    fusion_bodies.add(cm.group(1))
+    dus_map = {}
+    for name in fusion_bodies:
+        if name in comps:
+            ub = _dus_update_bytes(comps[name])
+            if ub is not None:
+                dus_map[name] = ub
+    memo: dict[str, Stats] = {}
+
+    def total(name: str, stack: tuple = ()) -> Stats:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return Stats()
+        comp = comps[name]
+        st = _local_stats(comp, name in fusion_bodies, dus_map)
+        for op in comp.ops:
+            for callee, mult in _callees(op):
+                st.add(total(callee, stack + (name,)), mult)
+        memo[name] = st
+        return st
+
+    return total(entry)
+
+
+def analyze_collectives_only(text: str) -> dict:
+    st = analyze(text)
+    return {
+        "bytes": st.collective_bytes,
+        "counts": st.collective_counts,
+        "total_bytes": st.total_collective_bytes,
+    }

@@ -1,0 +1,21 @@
+"""repro.models — LM-family backbones (dense GQA, MoE-on-buckets, Mamba-1/2,
+Zamba hybrid, Whisper enc-dec) with spec-driven params and logical-axis
+sharding."""
+
+from repro.models import (
+    attention,
+    layers,
+    lm,
+    mlp,
+    moe,
+    sharding,
+    spec,
+    ssm,
+    transformer,
+    whisper,
+)
+
+__all__ = [
+    "attention", "layers", "lm", "mlp", "moe", "sharding", "spec", "ssm",
+    "transformer", "whisper",
+]

@@ -1,0 +1,339 @@
+"""GQA attention: projections + RoPE + flash-style chunked attention.
+
+Three compute paths, one semantics (all validated against
+kernels/flash_attention/ref.py):
+
+* ``chunked_attention`` — pure-XLA FlashAttention dataflow: double scan over
+  (q chunks, kv chunks) with online softmax.  Used for train/prefill in the
+  dry-run and on CPU: it lowers everywhere and shows the kernel's true
+  O(S·D) memory profile to ``memory_analysis``/roofline instead of an
+  [S, S] score materialization.
+* Pallas kernel (``repro.kernels.flash_attention``) — selected on real TPU.
+* ``decode_attention`` — single-token path against a KV cache
+  (memory-bound gather + softmax; no blocking needed).
+
+Sliding-window masking (zamba2 long-context) is supported in all paths.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope
+from repro.models.sharding import Rules, shard
+from repro.models.spec import ParamSpec
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def attn_spec(cfg: ArchConfig, *, cross: bool = False) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    if cfg.head_pad:
+        # §Perf lever: pad q heads up to a TP-divisible count (e.g. llama4's
+        # 40 -> 48 on a 16-way tensor axis).  The pad heads' wo rows start at
+        # ~0 contribution scale-wise; capacity is slightly larger, compute
+        # shards instead of replicating.
+        if cfg.head_pad % hkv:
+            raise ValueError("head_pad must be a multiple of n_kv_heads")
+        hq = cfg.head_pad
+    return {
+        "wq": ParamSpec((d, hq, dh), (None, "heads", None)),
+        "wk": ParamSpec((d, hkv, dh), (None, "kv_heads", None)),
+        "wv": ParamSpec((d, hkv, dh), (None, "kv_heads", None)),
+        "wo": ParamSpec((hq, dh, d), ("heads", None, None),
+                        fan_in_dims=(0, 1)),
+    }
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # [B, Hkv, S_max, Dh]
+    v: jax.Array
+
+
+def project_qkv(cfg: ArchConfig, p: dict, x_q: jax.Array,
+                x_kv: jax.Array, rules: Rules | None,
+                positions: jax.Array | None, kv_positions: jax.Array | None,
+                *, use_rope: bool):
+    q = jnp.einsum("bsd,dhe->bhse", x_q, p["wq"].astype(x_q.dtype))
+    k = jnp.einsum("bsd,dhe->bhse", x_kv, p["wk"].astype(x_kv.dtype))
+    v = jnp.einsum("bsd,dhe->bhse", x_kv, p["wv"].astype(x_kv.dtype))
+    q = shard(q, rules, "batch", "heads", None, None)
+    k = shard(k, rules, "batch", "kv_heads", None, None)
+    v = shard(v, rules, "batch", "kv_heads", None, None)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def output_proj(p: dict, o: jax.Array, rules: Rules | None) -> jax.Array:
+    y = jnp.einsum("bhse,hed->bsd", o, p["wo"].astype(o.dtype))
+    return shard(y, rules, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (pure XLA)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(
+    q: jax.Array,   # [B, Hq, Sq, D]
+    k: jax.Array,   # [B, Hkv, Skv, D]
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,          # 0 = unlimited
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+    recompute_bwd: bool = True,
+) -> jax.Array:
+    """Flash-style attention; with ``recompute_bwd`` the backward pass
+    recomputes probability blocks from (q, k, lse) instead of letting
+    autodiff stack every [q_chunk, kv_chunk] block across both scan levels
+    (§Perf iteration: the stacking was the dominant attention HBM term)."""
+    if recompute_bwd:
+        fn = _flash_vjp(causal, window, q_chunk, kv_chunk, q_offset)
+        return fn(q, k, v)
+    return _chunked_attention_fwd(
+        q, k, v, causal=causal, window=window, q_chunk=q_chunk,
+        kv_chunk=kv_chunk, q_offset=q_offset,
+    )[0]
+
+
+def _chunked_attention_fwd(
+    q, k, v, *, causal, window, q_chunk, kv_chunk, q_offset,
+):
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nk = -(-sq // q_chunk), -(-skv // kv_chunk)
+    pad_q, pad_k = nq * q_chunk - sq, nk * kv_chunk - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    qg = q.reshape(b, hkv, g, nq, q_chunk, d).transpose(3, 0, 1, 2, 4, 5)
+    kc = k.reshape(b, hkv, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+
+    q_ids = q_offset + jnp.arange(nq * q_chunk).reshape(nq, q_chunk)
+    k_ids = jnp.arange(nk * kv_chunk).reshape(nk, kv_chunk)
+    kv_valid = (jnp.arange(nk * kv_chunk) < skv).reshape(nk, kv_chunk)
+
+    def q_body(_, q_in):
+        qi, qid = q_in                                   # [B,Hkv,g,qc,D], [qc]
+
+        def kv_body(carry, kv_in):
+            m, l, acc = carry
+            ki, vi, kid, kval = kv_in
+            # bf16 operands, f32 MXU accumulation — no materialized upcast
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", qi, ki,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            mask = kval[None, :]
+            if causal:
+                mask = mask & (qid[:, None] >= kid[None, :])
+            if window:
+                mask = mask & (qid[:, None] - kid[None, :] < window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m, m_cur)
+            safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+            p_ = jnp.exp(s - safe[..., None])
+            p_ = jnp.where(mask[None, None, None], p_, 0.0)
+            alpha = jnp.where(m == NEG_INF, 0.0, jnp.exp(m - safe))
+            l_new = alpha * l + jnp.sum(p_, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p_.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), (kc, vc, k_ids, kv_valid)
+        )
+        lse = jnp.where(l > 0.0, m + jnp.log(jnp.where(l > 0, l, 1.0)),
+                        NEG_INF)
+        l = jnp.where(l == 0.0, 1.0, l)
+        return None, ((acc / l[..., None]).astype(q.dtype), lse)
+
+    _, (out, lse) = jax.lax.scan(q_body, None, (qg, q_ids))
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, nq * q_chunk, d)
+    lse = lse.transpose(1, 2, 3, 0, 4).reshape(b, hkv, g, nq * q_chunk)
+    return out[:, :, :sq, :], lse[:, :, :, :sq]
+
+
+def _chunked_attention_bwd(
+    q, k, v, out, lse, dout, *, causal, window, q_chunk, kv_chunk, q_offset,
+):
+    """Flash backward: recompute p blocks from (q, k, lse); never stack
+    probabilities.  dk/dv accumulate in an f32 carry; dq is emitted per
+    q chunk."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nk = -(-sq // q_chunk), -(-skv // kv_chunk)
+    pad_q, pad_k = nq * q_chunk - sq, nk * kv_chunk - skv
+    padq = lambda z: jnp.pad(z, ((0, 0), (0, 0), (0, pad_q), (0, 0))) if pad_q else z
+    padk = lambda z: jnp.pad(z, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else z
+    qp, dop, outp = padq(q), padq(dout), padq(out)
+    kp, vp = padk(k), padk(v)
+
+    delta = jnp.sum(dop.astype(jnp.float32) * outp.astype(jnp.float32),
+                    axis=-1)                                    # [B,Hq,Sq']
+    delta = delta.reshape(b, hkv, g, nq, q_chunk).transpose(3, 0, 1, 2, 4)
+    lse_p = jnp.pad(lse, ((0, 0), (0, 0), (0, 0), (0, pad_q)),
+                    constant_values=NEG_INF) if pad_q else lse
+    lse_c = lse_p.reshape(b, hkv, g, nq, q_chunk).transpose(3, 0, 1, 2, 4)
+
+    qg = qp.reshape(b, hkv, g, nq, q_chunk, d).transpose(3, 0, 1, 2, 4, 5)
+    dog = dop.reshape(b, hkv, g, nq, q_chunk, d).transpose(3, 0, 1, 2, 4, 5)
+    kc = kp.reshape(b, hkv, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = vp.reshape(b, hkv, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+
+    q_ids = q_offset + jnp.arange(nq * q_chunk).reshape(nq, q_chunk)
+    k_ids = jnp.arange(nk * kv_chunk).reshape(nk, kv_chunk)
+    kv_valid = (jnp.arange(nk * kv_chunk) < skv).reshape(nk, kv_chunk)
+
+    def q_body(carry, q_in):
+        dk_full, dv_full = carry
+        qi, doi, di, lsei, qid = q_in
+
+        def kv_body(inner, j):
+            dq_i, dk_f, dv_f = inner
+            kj = jax.lax.dynamic_index_in_dim(kc, j, 0, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vc, j, 0, keepdims=False)
+            kid = jax.lax.dynamic_index_in_dim(k_ids, j, 0, keepdims=False)
+            kval = jax.lax.dynamic_index_in_dim(kv_valid, j, 0, keepdims=False)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kval[None, :]
+            if causal:
+                mask = mask & (qid[:, None] >= kid[None, :])
+            if window:
+                mask = mask & (qid[:, None] - kid[None, :] < window)
+            # rows with no valid keys (lse == -inf: padding) contribute 0
+            row_ok = lsei > NEG_INF / 2
+            p = jnp.exp(s - jnp.where(row_ok, lsei, 0.0)[..., None])
+            p = jnp.where(mask[None, None, None] & row_ok[..., None], p, 0.0)
+            pc = p.astype(v.dtype)
+            dv_c = jnp.einsum("bhgqk,bhgqd->bhkd", pc, doi,
+                              preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", doi, vj,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - di[..., None]) * scale
+            dsc = ds.astype(q.dtype)
+            dq_i = dq_i + jnp.einsum("bhgqk,bhkd->bhgqd", dsc, kj,
+                                     preferred_element_type=jnp.float32)
+            dk_c = jnp.einsum("bhgqk,bhgqd->bhkd", dsc, qi,
+                              preferred_element_type=jnp.float32)
+            off = j * kv_chunk
+            upd = lambda full, c: jax.lax.dynamic_update_slice_in_dim(
+                full, jax.lax.dynamic_slice_in_dim(full, off, kv_chunk, 2) + c,
+                off, axis=2)
+            return (dq_i, upd(dk_f, dk_c), upd(dv_f, dv_c)), None
+
+        dq0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        (dq_i, dk_full, dv_full), _ = jax.lax.scan(
+            kv_body, (dq0, dk_full, dv_full), jnp.arange(nk))
+        return (dk_full, dv_full), dq_i
+
+    dk0 = jnp.zeros((b, hkv, nk * kv_chunk, d), jnp.float32)
+    dv0 = jnp.zeros_like(dk0)
+    (dk_full, dv_full), dqs = jax.lax.scan(
+        q_body, (dk0, dv0), (qg, dog, delta, lse_c, q_ids))
+    dq = dqs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, nq * q_chunk, d)
+    return (dq[:, :, :sq, :].astype(q.dtype),
+            dk_full[:, :, :skv, :].astype(k.dtype),
+            dv_full[:, :, :skv, :].astype(v.dtype))
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_vjp(causal, window, q_chunk, kv_chunk, q_offset):
+    kw = dict(causal=causal, window=window, q_chunk=q_chunk,
+              kv_chunk=kv_chunk, q_offset=q_offset)
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        return _chunked_attention_fwd(q, k, v, **kw)[0]
+
+    def fwd(q, k, v):
+        out, lse = _chunked_attention_fwd(q, k, v, **kw)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, dout):
+        return _chunked_attention_bwd(*res, dout, **kw)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def decode_attention(
+    q: jax.Array,          # [B, Hq, 1, D]
+    cache: KVCache,        # [B, Hkv, S_max, D]
+    cache_len: jax.Array,  # [] int32 — valid prefix length (incl. new token)
+    *,
+    window: int = 0,
+) -> jax.Array:
+    b, hq, _, d = q.shape
+    hkv = cache.k.shape[1]
+    g = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    s_max = cache.k.shape[2]
+    qg = q.reshape(b, hkv, g, d)
+    # bf16 cache streamed through the MXU with f32 accumulation: never
+    # materialize an f32 copy of the (huge) cache.
+    s = jnp.einsum(
+        "bhgd,bhkd->bhgk", qg, cache.k.astype(qg.dtype),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    idx = jnp.arange(s_max)
+    mask = idx[None, None, None, :] < cache_len
+    if window:
+        mask = mask & (idx[None, None, None, :] >= cache_len - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p.astype(cache.v.dtype),
+                   cache.v, preferred_element_type=jnp.float32)
+    return o.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array) -> KVCache:
+    """Insert [B, Hkv, 1, D] at position ``pos`` along the S axis."""
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), pos, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), pos, axis=2)
+    return KVCache(k=k, v=v)
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype) -> KVCache:
+    shape = (batch, cfg.n_kv_heads, s_max, cfg.d_head)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_spec(cfg: ArchConfig, batch: int, s_max: int, dtype) -> KVCache:
+    shape = (batch, cfg.n_kv_heads, s_max, cfg.d_head)
+    sds = jax.ShapeDtypeStruct(shape, dtype)
+    return KVCache(k=sds, v=sds)
+
+
+def cache_axes() -> KVCache:
+    return KVCache(k=("batch", "kv_heads", None, None),
+                   v=("batch", "kv_heads", None, None))

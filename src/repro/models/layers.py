@@ -1,0 +1,82 @@
+"""Shared layer primitives: norms, RoPE, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import Rules, shard
+from repro.models.spec import ParamSpec
+
+
+# -- norms ------------------------------------------------------------------
+
+def norm_spec(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), (None,), init="ones")}
+    return {
+        "scale": ParamSpec((d,), (None,), init="ones"),
+        "bias": ParamSpec((d,), (None,), init="zeros"),
+    }
+
+
+def apply_norm(p: dict, x: jax.Array, *, kind: str, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -- rotary position embedding ------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, H, S, D]; positions: [B, S] (int)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # [D/2]
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,S,D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoid table [seq, d]."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- embeddings ---------------------------------------------------------------
+
+def embed_spec(vocab: int, d: int) -> dict:
+    return {"tokens": ParamSpec((vocab, d), ("vocab", None), init="small_normal")}
+
+
+def embed(p: dict, tokens: jax.Array, rules: Rules | None) -> jax.Array:
+    """Vocab-sharded gather: [B, S] int32 -> [B, S, d]."""
+    out = jnp.take(p["tokens"], tokens, axis=0)
+    return shard(out, rules, "batch", None, None)
+
+
+def unembed_spec(d: int, vocab: int) -> dict:
+    return {"w": ParamSpec((d, vocab), (None, "vocab"))}
+
+
+def logits(p_unembed: dict | None, p_embed: dict, x: jax.Array,
+           rules: Rules | None, *, tied: bool) -> jax.Array:
+    w = p_embed["tokens"].T if tied else p_unembed["w"]
+    out = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return shard(out, rules, "batch", None, "vocab")

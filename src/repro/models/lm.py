@@ -1,0 +1,201 @@
+"""Unified model API: every --arch resolves to the same five entry points.
+
+  spec(cfg)                      — parameter ParamSpec tree
+  init(key, cfg)                 — materialized params
+  loss_fn(cfg, params, batch)    — scalar CE loss + metrics (train_step core)
+  prefill(cfg, params, batch)    — last-token logits + stacked caches
+  decode(cfg, params, token, cache, pos) — one-token serve step
+
+plus ``input_specs(cfg, shape)`` — ShapeDtypeStruct stand-ins for every
+model input of a given (arch x shape) cell (the dry-run contract), and
+``batch_pspecs`` for their shardings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import attention as attn_m
+from repro.models import spec as sp
+from repro.models import ssm as ssm_m
+from repro.models import transformer as tfm
+from repro.models import whisper as wsp
+from repro.models.sharding import Rules
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def model_spec(cfg: ArchConfig) -> dict:
+    if cfg.is_encdec:
+        return wsp.encdec_spec(cfg)
+    return tfm.decoder_spec(cfg)
+
+
+def init(key: jax.Array, cfg: ArchConfig) -> dict:
+    return sp.init_tree(key, model_spec(cfg), _dtype(cfg))
+
+
+def param_shapes(cfg: ArchConfig) -> dict:
+    return sp.shape_tree(model_spec(cfg), _dtype(cfg))
+
+
+def param_pspecs(cfg: ArchConfig, rules: Rules) -> dict:
+    return sp.pspec_tree(model_spec(cfg), rules)
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict,
+            rules: Rules | None = None, *, remat: bool = True):
+    if cfg.is_encdec:
+        out = wsp.forward(cfg, params, batch["frames"], batch["tokens"],
+                          rules, remat=remat)
+    else:
+        out = tfm.forward(cfg, params, batch["tokens"], rules, remat=remat)
+    loss = cross_entropy(out.logits, batch["targets"])
+    metrics = dict(out.metrics)
+    metrics["ce_loss"] = loss
+    if "aux_loss" in metrics:
+        loss = loss + MOE_AUX_WEIGHT * metrics["aux_loss"]
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict,
+            rules: Rules | None = None, *, window: int = 0):
+    if cfg.is_encdec:
+        out = wsp.forward(cfg, params, batch["frames"], batch["tokens"],
+                          rules, emit_cache=True)
+    else:
+        out = tfm.forward(cfg, params, batch["tokens"], rules,
+                          emit_cache=True, window=window)
+    return out.logits[:, -1, :], out.cache
+
+
+def decode(cfg: ArchConfig, params: dict, token: jax.Array, cache,
+           pos: jax.Array, rules: Rules | None = None):
+    if cfg.is_encdec:
+        return wsp.decode_step(cfg, params, token, cache, pos, rules)
+    return tfm.decode_step(cfg, params, token, cache, pos, rules)
+
+
+def make_cache(cfg: ArchConfig, batch: int, s_max: int, *,
+               enc_s: int = 0, build: str = "zeros"):
+    if cfg.is_encdec:
+        return wsp.make_cache(cfg, batch, s_max, enc_s or s_max, build=build)
+    return tfm.make_cache(cfg, batch, s_max, build=build)
+
+
+def pad_cache(cfg: ArchConfig, cache, s_max: int):
+    """Grow prefill KV caches ([.., B, H, S, D]) to s_max decode slots."""
+
+    def one(entry):
+        if isinstance(entry, attn_m.KVCache) and entry.k.shape[-2] < s_max:
+            padw = [(0, 0)] * entry.k.ndim
+            padw[-2] = (0, s_max - entry.k.shape[-2])
+            return attn_m.KVCache(k=jnp.pad(entry.k, padw),
+                                  v=jnp.pad(entry.v, padw))
+        return entry
+
+    return jax.tree.map(
+        one, cache,
+        is_leaf=lambda z: isinstance(z, (attn_m.KVCache, ssm_m.SSMState)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input contracts (per arch x shape cell)
+# ---------------------------------------------------------------------------
+
+def cache_len_for(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Decode-cache length policy: sliding-window archs cap the KV ring at
+    cfg.window for the long_500k cell (DESIGN.md §4)."""
+    if shape.kind == "long_decode" and cfg.long_context == "native" \
+            and cfg.attn_layers > 0:
+        return cfg.window
+    if cfg.is_encdec:
+        return cfg.max_target_len
+    return shape.seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    gb, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, i32)
+    dt = _dtype(cfg)
+
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            return {
+                "frames": jax.ShapeDtypeStruct((gb, s, cfg.d_model), dt),
+                "tokens": tok(gb, cfg.max_target_len),
+                "targets": tok(gb, cfg.max_target_len),
+            }
+        return {"tokens": tok(gb, s), "targets": tok(gb, s)}
+
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            return {
+                "frames": jax.ShapeDtypeStruct((gb, s, cfg.d_model), dt),
+                "tokens": tok(gb, cfg.max_target_len),
+            }
+        return {"tokens": tok(gb, s)}
+
+    # decode / long_decode: one new token against a seq_len cache
+    c_len = cache_len_for(cfg, shape)
+    cache = make_cache(cfg, gb, c_len, enc_s=s, build="spec")
+    return {
+        "token": tok(gb),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeConfig, rules: Rules) -> dict:
+    """PartitionSpecs matching :func:`input_specs` leaf-for-leaf."""
+    specs = input_specs(cfg, shape)
+    gb = shape.global_batch
+    if shape.kind in ("train", "prefill"):
+        out = {}
+        for name, leaf in specs.items():
+            axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+            out[name] = rules.pspec(axes, tuple(leaf.shape))
+        return out
+    if cfg.is_encdec:
+        cache_p = jax.tree.map(
+            lambda e: attn_m.KVCache(
+                k=rules.pspec((None, "batch", "kv_heads", None, None),
+                              tuple(e.k.shape)),
+                v=rules.pspec((None, "batch", "kv_heads", None, None),
+                              tuple(e.v.shape)),
+            ),
+            specs["cache"],
+            is_leaf=lambda z: isinstance(z, attn_m.KVCache),
+        )
+    else:
+        cache_p = tfm.cache_pspecs(specs["cache"], rules)
+    return {
+        "token": rules.pspec(("batch",), (gb,)),
+        "cache": cache_p,
+        "pos": rules.pspec(()),
+    }

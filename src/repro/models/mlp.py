@@ -1,0 +1,43 @@
+"""Dense FFN: SwiGLU (llama-family) or GELU (whisper/classic)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.sharding import Rules, shard
+from repro.models.spec import ParamSpec
+
+
+def mlp_spec(cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": ParamSpec((d, f), (None, "ff")),
+            "w_up": ParamSpec((d, f), (None, "ff")),
+            "w_down": ParamSpec((f, d), ("ff", None)),
+        }
+    return {
+        "w_up": ParamSpec((d, f), (None, "ff")),
+        "b_up": ParamSpec((f,), ("ff",), init="zeros"),
+        "w_down": ParamSpec((f, d), ("ff", None)),
+        "b_down": ParamSpec((d,), (None,), init="zeros"),
+    }
+
+
+def mlp_apply(cfg: ArchConfig, p: dict, x: jax.Array,
+              rules: Rules | None) -> jax.Array:
+    dt = x.dtype
+    if cfg.act == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = jax.nn.silu(gate) * up
+        h = shard(h, rules, "batch", None, "ff")
+        y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt)) + p["b_up"].astype(dt)
+        h = jax.nn.gelu(h)
+        h = shard(h, rules, "batch", None, "ff")
+        y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt)) + p["b_down"].astype(dt)
+    return shard(y, rules, "batch", None, None)

@@ -1,0 +1,202 @@
+"""Mixture-of-Experts FFN built on the paper's bucket-aggregation machinery.
+
+The mapping (DESIGN.md §5): a token choosing an expert is a pulse event
+choosing a destination chip.
+
+  router top-k            == routing-LUT lookup (fan-out K = top_k)
+  capacity-factor buckets  == bucket-buffers ([E, C] slabs, FIFO-stable)
+  token dropping           == bucket overflow (identical accounting)
+  expert-parallel exchange == the Tourmalet all_to_all (inserted by GSPMD
+                              from the sharding constraints below)
+  weighted combine         == destination merge
+
+Slot assignment uses ``repro.core.buckets.compute_slots_sorted`` — the same
+rank-within-bucket contract as the event path, in its sort-based form
+(token counts are ~10^6, expert counts ~10^2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import buckets as bk
+from repro.models.sharding import Rules, shard
+from repro.models.spec import ParamSpec
+
+
+def moe_spec(cfg: ArchConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, e), (None, None), init="small_normal"),
+        "w_gate": ParamSpec((e, d, f), ("experts", None, None),
+                            fan_in_dims=(1,)),
+        "w_up": ParamSpec((e, d, f), ("experts", None, None),
+                          fan_in_dims=(1,)),
+        "w_down": ParamSpec((e, f, d), ("experts", None, None),
+                            fan_in_dims=(1,)),
+    }
+
+
+def capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    """Bucket capacity: ceil(T·k/E · cf), aligned up to 8 lanes."""
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(8, -(-c // 8) * 8)
+
+
+def _data_groups(rules: Rules | None, batch: int) -> int:
+    """Number of data shards the token stream is split across (1 on CPU)."""
+    if rules is None:
+        return 1
+    axes = rules.mesh_axis("batch")
+    fitted = rules._fit(axes, batch)
+    if fitted is None:
+        return 1
+    if isinstance(fitted, str):
+        fitted = (fitted,)
+    g = 1
+    for a in fitted:
+        g *= int(rules.mesh.shape[a])
+    return g
+
+
+def moe_apply_local(cfg: ArchConfig, p: dict, x: jax.Array,
+                    rules: Rules | None) -> tuple[jax.Array, dict]:
+    """Shard-local dispatch (cfg.moe_dispatch == "local") — §Perf variant.
+
+    The paper's bucket-buffers are per-chip local: each source packs its own
+    buckets with a LOCAL capacity and the network only ever moves packed
+    slabs.  Here likewise: tokens are ranked within their data shard
+    (no global sort -> no all-gather of the token stream), the dispatch
+    scatter is row-local, and only the packed [G, E, C/G, d] slabs cross
+    the mesh.  Semantics: capacity is enforced per shard (C/G each), which
+    is exactly the hardware bucket behavior; with ample capacity the output
+    equals the global path (tests/test_moe_local.py).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    g = _data_groups(rules, b)
+    tl = t // g
+    xg = x.reshape(g, tl, d)
+
+    router_logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)              # [G,Tl,E]
+    gate, expert_idx = jax.lax.top_k(probs, k)                  # [G,Tl,k]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    flat_e = expert_idx.reshape(g, tl * k)
+    flat_tok = jnp.tile(
+        jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)[None], (g, 1))
+    flat_gate = gate.reshape(g, tl * k)
+
+    cap = max(8, -(-capacity(cfg, t) // (8 * g)) * 8)           # local C/G
+    slot, counts = jax.vmap(
+        lambda ee: bk.compute_slots_sorted(ee, jnp.ones_like(ee, bool), e)
+    )(flat_e)
+    keep = slot < cap
+    be = jnp.where(keep, flat_e, e)
+    bs_ = jnp.where(keep, slot, cap)
+
+    def scatter_row(xr, tok, bee, bss):
+        z = jnp.zeros((e, cap, d), x.dtype)
+        return z.at[bee, bss].set(xr[tok], mode="drop")
+
+    xd = jax.vmap(scatter_row)(xg, flat_tok, be, bs_)           # [G,E,C,d]
+    xd = shard(xd, rules, "batch", "experts", None, None)
+
+    dt = x.dtype
+    gate_h = jnp.einsum("gecd,edf->gecf", xd, p["w_gate"].astype(dt))
+    up_h = jnp.einsum("gecd,edf->gecf", xd, p["w_up"].astype(dt))
+    h = jax.nn.silu(gate_h) * up_h
+    h = shard(h, rules, "batch", "experts", None, None)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    ye = shard(ye, rules, "batch", "experts", None, None)
+
+    def combine_row(yer, tok, ee, ss, gg, kp):
+        y_tok = yer[jnp.clip(ee, 0, e - 1), jnp.clip(ss, 0, cap - 1)]
+        y_tok = y_tok * (gg * kp.astype(jnp.float32)).astype(dt)[:, None]
+        return jnp.zeros((tl, d), dt).at[tok].add(y_tok)
+
+    out = jax.vmap(combine_row)(ye, flat_tok, flat_e, slot, flat_gate, keep)
+    out = shard(out.reshape(b, s, d), rules, "batch", None, None)
+
+    assigned = t * k
+    dropped = assigned - jnp.sum(keep.astype(jnp.int32))
+    frac = jnp.sum(counts, axis=0).astype(jnp.float32) / assigned
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    metrics = {
+        "aux_loss": e * jnp.sum(frac * mean_prob),
+        "drop_fraction": dropped.astype(jnp.float32) / assigned,
+        "bucket_utilization": jnp.mean(
+            jnp.minimum(counts, cap).astype(jnp.float32)) / cap,
+    }
+    return out, metrics
+
+
+def moe_apply(cfg: ArchConfig, p: dict, x: jax.Array,
+              rules: Rules | None) -> tuple[jax.Array, dict]:
+    if cfg.moe_dispatch == "local":
+        return moe_apply_local(cfg, p, x, rules)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    # --- routing LUT lookup (top-k) ---
+    router_logits = jnp.einsum(
+        "td,de->te", xf.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)              # [T, E]
+    gate, expert_idx = jax.lax.top_k(probs, k)                  # [T, k]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    flat_e = expert_idx.reshape(-1)                             # [T*k]
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)    # [T*k]
+    flat_gate = gate.reshape(-1)
+
+    # --- bucket packing (capacity-factor slabs) ---
+    cap = capacity(cfg, t)
+    slot, counts = bk.compute_slots_sorted(
+        flat_e, jnp.ones_like(flat_e, dtype=bool), e
+    )
+    keep = slot < cap
+    be = jnp.where(keep, flat_e, e)       # out-of-bounds -> dropped
+    bs_ = jnp.where(keep, slot, cap)
+
+    xd = jnp.zeros((e, cap, d), x.dtype)
+    xd = xd.at[be, bs_].set(xf[flat_tok], mode="drop")
+    xd = shard(xd, rules, "experts", None, None)                # EP exchange
+
+    # --- expert FFN (SwiGLU) ---
+    dt = x.dtype
+    gate_h = jnp.einsum("ecd,edf->ecf", xd, p["w_gate"].astype(dt))
+    up_h = jnp.einsum("ecd,edf->ecf", xd, p["w_up"].astype(dt))
+    h = jax.nn.silu(gate_h) * up_h
+    h = shard(h, rules, "experts", None, None)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+    ye = shard(ye, rules, "experts", None, None)
+
+    # --- merge (weighted combine back to token order) ---
+    y_tok = ye[jnp.clip(flat_e, 0, e - 1), jnp.clip(slot, 0, cap - 1)]
+    y_tok = y_tok * (flat_gate * keep.astype(jnp.float32)).astype(dt)[:, None]
+    out = jnp.zeros((t, d), dt).at[flat_tok].add(y_tok)
+    out = shard(out.reshape(b, s, d), rules, "batch", None, None)
+
+    # --- accounting: identical to CommStats (overflow/utilization) ---
+    assigned = t * k
+    dropped = assigned - jnp.sum(keep.astype(jnp.int32))
+    frac_per_expert = counts.astype(jnp.float32) / assigned     # f_e
+    mean_prob = jnp.mean(probs, axis=0)                          # pbar_e
+    aux_loss = e * jnp.sum(frac_per_expert * mean_prob)
+    metrics = {
+        "aux_loss": aux_loss,
+        "drop_fraction": dropped.astype(jnp.float32) / assigned,
+        "bucket_utilization": jnp.mean(
+            jnp.minimum(counts, cap).astype(jnp.float32)
+        ) / cap,
+    }
+    return out, metrics

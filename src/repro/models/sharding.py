@@ -1,0 +1,98 @@
+"""Logical-axis sharding rules.
+
+Every parameter/activation dimension carries a *logical* name; Rules maps
+logical names onto mesh axes.  The same model code then runs:
+
+  * unsharded on CPU (rules=None — constraints are no-ops),
+  * single-pod (batch -> "data", tensor -> "model"),
+  * multi-pod  (batch -> ("pod", "data"), tensor -> "model").
+
+Mappings (Megatron-style 2D TP x DP):
+  batch                         -> data axes (+"pod")
+  heads / kv_heads / ff / experts / vocab / d_inner / ssm_heads -> "model"
+  embed / seq / d_head / state / window ...                      -> replicated
+  seq_shard -> "model" (sequence parallelism for long-context cells)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TENSOR_AXES = frozenset(
+    {"heads", "kv_heads", "ff", "experts", "vocab", "d_inner", "ssm_heads",
+     "seq_shard"}
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    batch_axes: tuple[str, ...] = ("data",)
+    tensor_axis: str | tuple[str, ...] = "model"
+    kv_axis: str | None = None   # kv-factored mesh: shard kv_heads on a
+                                 # sub-axis of the tensor tier (serving)
+
+    def mesh_axis(self, logical: str | None):
+        if logical is None:
+            return None
+        if logical == "batch":
+            return self.batch_axes
+        if logical == "kv_heads" and self.kv_axis is not None:
+            return self.kv_axis
+        if logical in TENSOR_AXES:
+            return self.tensor_axis
+        return None
+
+    def _axis_size(self, name: str) -> int:
+        return int(self.mesh.shape[name])
+
+    def _fit(self, mesh_axes, dim: int | None):
+        """Divisibility fallback: drop mesh axes (outermost first) until the
+        dim divides — e.g. kv_heads=8 on a 16-way model axis replicates
+        (Megatron KV-replication), global_batch=1 cannot data-shard, a
+        2x16 ("pod","data") batch mapping degrades to ("data",) when only
+        16 divides.  Recorded honestly in the roofline (§Perf)."""
+        if mesh_axes is None or dim is None:
+            return mesh_axes
+        axes = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= self._axis_size(a)
+            if dim % prod == 0:
+                return axes if len(axes) > 1 else axes[0]
+            axes = axes[1:]
+        return None
+
+    def pspec(self, axes: tuple[str | None, ...],
+              shape: tuple[int, ...] | None = None) -> P:
+        resolved = [self.mesh_axis(a) for a in axes]
+        if shape is not None:
+            resolved = [self._fit(m, d) for m, d in zip(resolved, shape)]
+        return P(*resolved)
+
+    def sharding(self, axes: tuple[str | None, ...],
+                 shape: tuple[int, ...] | None = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(axes, shape))
+
+
+def from_mesh(mesh: Mesh) -> Rules:
+    batch = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if "kv" in mesh.axis_names:
+        return Rules(mesh=mesh, batch_axes=batch,
+                     tensor_axis=("kv", "mp"), kv_axis="kv")
+    return Rules(mesh=mesh, batch_axes=batch)
+
+
+def shard(x: jax.Array, rules: Rules | None, *axes: str | None) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op without rules)."""
+    if rules is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"rank mismatch: {len(axes)} axes for shape {x.shape}")
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(tuple(axes), tuple(x.shape))
+    )

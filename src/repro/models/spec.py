@@ -1,0 +1,100 @@
+"""Parameter-spec trees: one source of truth for shapes, init, and sharding.
+
+A model's parameters are described as a nested dict of :class:`ParamSpec`
+(shape + logical axis names + init rule).  From the same tree we derive
+
+  * ``init_tree``   — materialized parameters (real RNG init, smoke tests),
+  * ``shape_tree``  — jax.ShapeDtypeStruct stand-ins (dry-run, no alloc),
+  * ``pspec_tree``  — jax.sharding.PartitionSpec per leaf (pjit shardings).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import Rules
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]          # logical axis name (str) or None per dim
+    init: str = "normal"           # normal | zeros | ones | small_normal
+    fan_in_dims: tuple[int, ...] = (0,)
+    dtype: Any = None              # None -> model dtype
+
+    def scale(self) -> float:
+        fan_in = 1
+        for d in self.fan_in_dims:
+            fan_in *= self.shape[d]
+        return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_tree(key: jax.Array, tree, dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, spec in zip(keys, leaves):
+        dt = spec.dtype or dtype
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dt))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dt))
+        elif spec.init == "small_normal":
+            out.append((0.02 * jax.random.normal(k, spec.shape)).astype(dt))
+        else:
+            out.append(
+                (spec.scale() * jax.random.normal(k, spec.shape)).astype(dt)
+            )
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_tree(tree, dtype) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype),
+        tree, is_leaf=_is_spec,
+    )
+
+
+def pspec_tree(tree, rules: Rules) -> Any:
+    return jax.tree.map(
+        lambda s: rules.pspec(s.axes, s.shape), tree, is_leaf=_is_spec
+    )
+
+
+def sharding_tree(tree, rules: Rules) -> Any:
+    return jax.tree.map(
+        lambda s: rules.sharding(s.axes, s.shape), tree, is_leaf=_is_spec
+    )
+
+
+def stack_specs(tree, n: int, axis_name=None) -> Any:
+    """Prepend a stacking dimension (scan-over-layers repeats)."""
+    return jax.tree.map(
+        lambda s: ParamSpec(
+            shape=(n,) + s.shape,
+            axes=(axis_name,) + s.axes,
+            init=s.init,
+            fan_in_dims=tuple(d + 1 for d in s.fan_in_dims),
+            dtype=s.dtype,
+        ),
+        tree, is_leaf=_is_spec,
+    )
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.flatten(tree, is_leaf=_is_spec)[0]
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in (s.shape if _is_spec(s) else s.shape):
+            n *= d
+        total += n
+    return total

@@ -1,0 +1,314 @@
+"""Selective-SSM (Mamba) blocks: Mamba-1 (falcon-mamba) and Mamba-2/SSD
+(zamba2 backbone).
+
+Compute paths:
+
+* train/prefill — ``scan_chunked``: ``lax.scan`` over time in chunks with an
+  ``unroll``-step fused inner body; the carried state h [B, d_inner, N] hits
+  HBM once per chunk instead of once per step (the chunk size is the §Perf
+  lever; the Pallas kernel ``repro.kernels.ssm_scan`` keeps h in VMEM for
+  the whole trace and is selected on real TPU).
+* decode — single recurrence step on an explicit :class:`SSMState`
+  (h + depthwise-conv tail); O(1) in sequence length, which is why the SSM
+  archs run the long_500k cell natively.
+
+Mamba-2 reuses the same recurrence with per-head scalar decay
+(A[d, :] = a_head) — one code path, two parameterizations.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.sharding import Rules, shard
+from repro.models.spec import ParamSpec
+
+
+class SSMState(NamedTuple):
+    h: jax.Array     # [B, d_inner, N] f32
+    conv: jax.Array  # [B, K-1, d_inner]
+
+
+def dt_rank(cfg: ArchConfig) -> int:
+    return -(-cfg.d_model // 16)
+
+
+def ssm_spec(cfg: ArchConfig) -> dict:
+    d, di, n, kk = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    spec = {
+        "w_in_x": ParamSpec((d, di), (None, "d_inner")),
+        "w_in_z": ParamSpec((d, di), (None, "d_inner")),
+        "conv_w": ParamSpec((kk, di), (None, "d_inner"), init="small_normal"),
+        "conv_b": ParamSpec((di,), ("d_inner",), init="zeros"),
+        "out_proj": ParamSpec((di, d), ("d_inner", None)),
+        "D": ParamSpec((di,), ("d_inner",), init="ones"),
+    }
+    if cfg.ssm_version == 1:
+        r = dt_rank(cfg)
+        spec.update({
+            "w_dt_low": ParamSpec((di, r), ("d_inner", None)),
+            "w_dt": ParamSpec((r, di), (None, "d_inner")),
+            "dt_bias": ParamSpec((di,), ("d_inner",), init="zeros"),
+            "w_B": ParamSpec((di, n), ("d_inner", None)),
+            "w_C": ParamSpec((di, n), ("d_inner", None)),
+            "A_log": ParamSpec((di, n), ("d_inner", None), init="zeros"),
+        })
+    else:  # Mamba-2 / SSD: per-head scalar decay, B/C from the residual stream
+        h = cfg.n_ssm_heads
+        spec.update({
+            "w_dt": ParamSpec((d, h), (None, "ssm_heads")),
+            "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+            "w_B": ParamSpec((d, n), (None, None)),
+            "w_C": ParamSpec((d, n), (None, None)),
+            "A_log": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+            "norm_scale": ParamSpec((di,), ("d_inner",), init="ones"),
+        })
+    return spec
+
+
+def _conv1d(p: dict, x: jax.Array) -> jax.Array:
+    """Causal depthwise conv along time. x: [B, T, di]."""
+    kk, di = p["conv_w"].shape
+    rhs = p["conv_w"].astype(x.dtype).reshape(kk, 1, di)
+    y = jax.lax.conv_general_dilated(
+        x, rhs, window_strides=(1,), padding=[(kk - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=di,
+    )
+    return y + p["conv_b"].astype(x.dtype)
+
+
+def _dt_bc(cfg: ArchConfig, p: dict, x_res: jax.Array, x_conv: jax.Array):
+    """Compute (dt [B,T,di], B [B,T,N], C [B,T,N], A [di,N], dt_h, a_h).
+
+    dt_h [B,T,H] / a_h [H] are the per-head forms (ssm_version=2 only;
+    None for v1) consumed by the SSD chunk-parallel path.
+    """
+    f32 = jnp.float32
+    if cfg.ssm_version == 1:
+        low = jnp.einsum("btd,dr->btr", x_conv, p["w_dt_low"].astype(x_conv.dtype))
+        dt = jax.nn.softplus(
+            jnp.einsum("btr,rd->btd", low.astype(f32), p["w_dt"].astype(f32))
+            + p["dt_bias"].astype(f32)
+        )
+        bm = jnp.einsum("btd,dn->btn", x_conv.astype(f32), p["w_B"].astype(f32))
+        cm = jnp.einsum("btd,dn->btn", x_conv.astype(f32), p["w_C"].astype(f32))
+        a = -jnp.exp(p["A_log"].astype(f32))
+        dt_h = a_h = None
+    else:
+        h = cfg.n_ssm_heads
+        pdim = cfg.d_inner // h
+        dt_h = jax.nn.softplus(
+            jnp.einsum("btd,dh->bth", x_res.astype(f32), p["w_dt"].astype(f32))
+            + p["dt_bias"].astype(f32)
+        )
+        dt = jnp.repeat(dt_h, pdim, axis=-1)                   # [B,T,di]
+        bm = jnp.einsum("btd,dn->btn", x_res.astype(f32), p["w_B"].astype(f32))
+        cm = jnp.einsum("btd,dn->btn", x_res.astype(f32), p["w_C"].astype(f32))
+        a_h = -jnp.exp(p["A_log"].astype(f32))                 # [H]
+        a = jnp.repeat(a_h, pdim)[:, None] * jnp.ones(
+            (1, cfg.ssm_state), f32
+        )                                                       # [di, N]
+    return dt, bm, cm, a, dt_h, a_h
+
+
+def ssd_chunked(x, dt_h, a_h, bm, cm, dvec, h0, *, chunk: int = 128):
+    """Chunk-parallel SSD (Mamba-2) — the §Perf memory-term optimization.
+
+    Valid when the decay is a per-head scalar (ssm_version=2): within a
+    chunk of length L the recurrence closes into three MXU einsums with a
+    [B, H, L, L] decay-mask matrix, and the state h [B, H, P, N] touches
+    HBM once per CHUNK instead of once per scan tick — the pure-XLA
+    equivalent of what the fused Pallas kernel does with VMEM residency.
+
+    x: [B,T,di]; dt_h: [B,T,H]; a_h: [H] (negative); bm/cm: [B,T,N];
+    dvec: [di]; h0: [B,di,N] (reshaped to [B,H,P,N] internally).
+    All decay factors are exp of non-positive numbers — stable by
+    construction (no segsum inverse-product blowup).
+    """
+    b, t, di = x.shape
+    n = bm.shape[-1]
+    h = a_h.shape[0]
+    p = di // h
+    l = min(chunk, t)
+    pad = (-t) % l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt_h = jnp.pad(dt_h, ((0, 0), (0, pad), (0, 0)))  # dt=0: identity
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+    nc = (t + pad) // l
+
+    f32 = jnp.float32
+    op_in = x.dtype if x.dtype == jnp.bfloat16 else f32
+    xh = x.astype(op_in).reshape(b, nc, l, h, p)
+    dth = dt_h.astype(f32).reshape(b, nc, l, h)
+    bmc = bm.astype(op_in).reshape(b, nc, l, n)
+    cmc = cm.astype(op_in).reshape(b, nc, l, n)
+    # move chunk axis first for the scan
+    cf = lambda z: jnp.moveaxis(z, 1, 0)
+    xh, dth, bmc, cmc = cf(xh), cf(dth), cf(bmc), cf(cmc)
+
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    # Einsum operands follow the model dtype (bf16 on TPU configs) with f32
+    # MXU accumulation; cum/exp/state stay f32.  §Perf iteration 3: halves
+    # the [B,L,L,H] decay-matrix and [B,L,H,P] operand HBM traffic.
+    op_dt = x.dtype if x.dtype == jnp.bfloat16 else f32
+
+    def body(hs, inp):
+        xc, dtc, bc, cc = inp                     # [B,l,H,P] [B,l,H] [B,l,N]
+        s = dtc * a_h                             # [B,l,H] (<= 0)
+        cum = jnp.cumsum(s, axis=1)               # [B,l,H]
+        # intra-chunk: M[b,h,t,s] = exp(cum_t - cum_s) · 1[t>=s] · (C_t·B_s)
+        decay_ts = jnp.exp(
+            jnp.where(tri[None, :, :, None],
+                      cum[:, :, None, :] - cum[:, None, :, :], -jnp.inf)
+        ).astype(op_dt)                            # [B,t,s,H]
+        cb = jnp.einsum("btn,bsn->bts", cc, bc,
+                        preferred_element_type=f32).astype(op_dt)
+        dtx = (dtc[..., None] * xc).astype(op_dt)  # [B,s,H,P]
+        y_intra = jnp.einsum("btsh,bts,bshp->bthp", decay_ts, cb, dtx,
+                             preferred_element_type=f32)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum(
+            "btn,bhpn,bth->bthp", cc.astype(f32), hs, jnp.exp(cum),
+            preferred_element_type=f32,
+        )
+        # state update
+        decay_last = jnp.exp(cum[:, -1, :])        # [B,H]
+        w = (jnp.exp(cum[:, -1:, :] - cum) * dtc).astype(op_dt)  # [B,s,H]
+        hs_new = decay_last[:, :, None, None] * hs + jnp.einsum(
+            "bshp,bsn,bsh->bhpn", xc, bc, w,
+            preferred_element_type=f32,
+        )
+        return hs_new, (y_intra + y_inter).astype(op_dt)
+
+    hs0 = h0.astype(f32).reshape(b, h, p, n)
+    hs_final, ys = jax.lax.scan(body, hs0, (xh, dth, bmc, cmc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * l, di)[:, :t]
+    y = y + x.astype(op_in)[:, :t] * dvec.astype(op_in)
+    return y, hs_final.reshape(b, di, n)
+
+
+def scan_chunked(x, dt, a, bm, cm, dvec, h0, *, unroll: int = 8):
+    """Sequential selective scan, ``unroll`` steps fused per lax.scan tick.
+
+    x/dt: [B, T, di]; a: [di, N]; bm/cm: [B, T, N]; h0: [B, di, N].
+    Returns (y [B, T, di] f32, h_final).
+    """
+    b, t, di = x.shape
+    n = a.shape[1]
+    pad = (-t) % unroll
+    if pad:
+        zt = lambda z: jnp.pad(z, ((0, 0), (0, pad), (0, 0)))
+        x, dt, bm, cm = zt(x), zt(dt), zt(bm), zt(cm)
+    tc = (t + pad) // unroll
+    rs = lambda z: z.reshape(b, tc, unroll, -1).transpose(1, 0, 2, 3)
+    xs = (rs(x.astype(jnp.float32)), rs(dt), rs(bm), rs(cm))
+
+    def body(h, inp):
+        xt, dtt, bt, ct = inp      # [B, unroll, ...]
+        ys = []
+        for i in range(unroll):
+            decay = jnp.exp(dtt[:, i, :, None] * a)            # [B, di, N]
+            h = decay * h + (dtt[:, i] * xt[:, i])[:, :, None] * bt[:, i, None, :]
+            ys.append(jnp.einsum("bdn,bn->bd", h, ct[:, i]))
+        return h, jnp.stack(ys, axis=1)                        # [B, unroll, di]
+
+    h_final, ys = jax.lax.scan(body, h0.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, tc * unroll, di)[:, :t]
+    return y + x.astype(jnp.float32)[:, :t] * dvec, h_final
+
+
+def ssm_apply(cfg: ArchConfig, p: dict, x: jax.Array, rules: Rules | None,
+              *, state: SSMState | None = None, unroll: int = 8,
+              return_state: bool = False):
+    """Full-sequence Mamba block. x: [B, T, d] -> [B, T, d]."""
+    b, t, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    dt_ = x.dtype
+    xh = jnp.einsum("btd,de->bte", x, p["w_in_x"].astype(dt_))
+    z = jnp.einsum("btd,de->bte", x, p["w_in_z"].astype(dt_))
+    xh = shard(xh, rules, "batch", None, "d_inner")
+    z = shard(z, rules, "batch", None, "d_inner")
+    xc = jax.nn.silu(_conv1d(p, xh))
+    dt, bm, cm, a, dt_h, a_h = _dt_bc(cfg, p, x, xc)
+    h0 = jnp.zeros((b, di, n), jnp.float32) if state is None else state.h
+    if cfg.ssm_version == 2 and cfg.ssm_impl == "ssd":
+        y, h_final = ssd_chunked(xc, dt_h, a_h, bm, cm,
+                                 p["D"].astype(jnp.float32), h0,
+                                 chunk=cfg.ssd_chunk)
+    else:
+        y, h_final = scan_chunked(xc, dt, a, bm, cm,
+                                  p["D"].astype(jnp.float32), h0,
+                                  unroll=cfg.ssm_unroll)
+    y = y.astype(dt_)
+    if cfg.ssm_version == 2:
+        # gated RMSNorm (zamba2): norm(y * silu(z)) * scale
+        g = y * jax.nn.silu(z)
+        ms = jnp.mean(g.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+        y = (g.astype(jnp.float32) * jax.lax.rsqrt(ms + cfg.norm_eps)
+             * p["norm_scale"].astype(jnp.float32)).astype(dt_)
+    else:
+        y = y * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(dt_))
+    out = shard(out, rules, "batch", None, None)
+    if return_state:
+        kk = cfg.ssm_conv
+        tail = xh[:, -(kk - 1):, :] if t >= kk - 1 else jnp.pad(
+            xh, ((0, 0), (kk - 1 - t, 0), (0, 0))
+        )
+        return out, SSMState(h=h_final, conv=tail)
+    return out
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype) -> SSMState:
+    return SSMState(
+        h=jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    )
+
+
+def ssm_state_spec(cfg: ArchConfig, batch: int, dtype) -> SSMState:
+    return SSMState(
+        h=jax.ShapeDtypeStruct((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        conv=jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    )
+
+
+def ssm_state_axes() -> SSMState:
+    return SSMState(h=("batch", "d_inner", None), conv=("batch", None, "d_inner"))
+
+
+def ssm_decode(cfg: ArchConfig, p: dict, x: jax.Array, state: SSMState,
+               rules: Rules | None) -> tuple[jax.Array, SSMState]:
+    """One-token step. x: [B, 1, d] -> ([B, 1, d], state)."""
+    dt_ = x.dtype
+    di = cfg.d_inner
+    xh = jnp.einsum("btd,de->bte", x, p["w_in_x"].astype(dt_))   # [B,1,di]
+    z = jnp.einsum("btd,de->bte", x, p["w_in_z"].astype(dt_))
+    conv_in = jnp.concatenate([state.conv, xh], axis=1)          # [B,K,di]
+    w = p["conv_w"].astype(dt_)                                  # [K, di]
+    xc = jnp.einsum("bkd,kd->bd", conv_in, w) + p["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc)[:, None, :]                             # [B,1,di]
+    dt, bm, cm, a, _, _ = _dt_bc(cfg, p, x, xc)
+    decay = jnp.exp(dt[:, 0, :, None] * a)                       # [B,di,N]
+    h = decay * state.h + (dt[:, 0] * xc[:, 0].astype(jnp.float32))[:, :, None] \
+        * bm[:, 0, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cm[:, 0]) \
+        + xc[:, 0].astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(dt_)[:, None, :]
+    if cfg.ssm_version == 2:
+        g = y * jax.nn.silu(z)
+        ms = jnp.mean(g.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+        y = (g.astype(jnp.float32) * jax.lax.rsqrt(ms + cfg.norm_eps)
+             * p["norm_scale"].astype(jnp.float32)).astype(dt_)
+    else:
+        y = y * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(dt_))
+    return shard(out, rules, "batch", None, None), SSMState(
+        h=h, conv=conv_in[:, 1:, :]
+    )

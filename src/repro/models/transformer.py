@@ -1,0 +1,351 @@
+"""Decoder-only transformer assembly for all LM-family architectures.
+
+Layers are grouped into a repeating *pattern* of length ``cfg.pattern_period()``
+(dense: 1, llama4: 2 [dense-FFN, MoE-FFN], zamba2: 6 [5x mamba2, shared-attn
++ mamba2], falcon-mamba: 1 [mamba]); parameters for each pattern position
+are stacked over repeats and the stack is driven by ``lax.scan`` —
+compile time is O(period), not O(n_layers), and remat wraps the scan body.
+
+The same block functions serve train (full sequence), prefill (returns
+per-layer KV/SSM caches) and decode (single token against caches).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import layers as ly
+from repro.models import mlp as mlpm
+from repro.models import moe as moem
+from repro.models import ssm as ssmm
+from repro.models.sharding import Rules
+from repro.models.sharding import shard as shard_act
+from repro.models.spec import ParamSpec, stack_specs
+
+
+# ---------------------------------------------------------------------------
+# Pattern description
+# ---------------------------------------------------------------------------
+
+def block_kinds(cfg: ArchConfig) -> list[str]:
+    """Block kind per pattern position: attn_mlp | attn_moe | ssm | shared_ssm."""
+    period = cfg.pattern_period()
+    kinds = []
+    for pos in range(period):
+        if cfg.family == "ssm":
+            kinds.append("ssm")
+        elif cfg.family == "hybrid":
+            kinds.append("shared_ssm" if pos == period - 1 else "ssm")
+        elif cfg.n_experts and ((pos + 1) % cfg.moe_every == 0):
+            kinds.append("attn_moe")
+        else:
+            kinds.append("attn_mlp")
+    return kinds
+
+
+def n_repeats(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.pattern_period()
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def _block_spec(cfg: ArchConfig, kind: str) -> dict:
+    d = cfg.d_model
+    if kind == "ssm" or kind == "shared_ssm":
+        return {"norm": ly.norm_spec(d, cfg.norm), "ssm": ssmm.ssm_spec(cfg)}
+    spec = {
+        "attn_norm": ly.norm_spec(d, cfg.norm),
+        "attn": attn.attn_spec(cfg),
+        "ffn_norm": ly.norm_spec(d, cfg.norm),
+    }
+    if kind == "attn_moe":
+        spec["moe"] = moem.moe_spec(cfg)
+    else:
+        spec["mlp"] = mlpm.mlp_spec(cfg)
+    return spec
+
+
+def shared_attn_spec(cfg: ArchConfig) -> dict:
+    """Zamba2's single shared attention+MLP block (one weight copy)."""
+    d = cfg.d_model
+    return {
+        "attn_norm": ly.norm_spec(d, cfg.norm),
+        "attn": attn.attn_spec(cfg),
+        "ffn_norm": ly.norm_spec(d, cfg.norm),
+        "mlp": mlpm.mlp_spec(cfg),
+    }
+
+
+def decoder_spec(cfg: ArchConfig) -> dict:
+    kinds = block_kinds(cfg)
+    blocks = {f"pos{i}": _block_spec(cfg, k) for i, k in enumerate(kinds)}
+    spec: dict[str, Any] = {
+        "embed": ly.embed_spec(cfg.vocab_size, cfg.d_model),
+        "blocks": stack_specs(blocks, n_repeats(cfg)),
+        "final_norm": ly.norm_spec(cfg.d_model, cfg.norm),
+    }
+    if cfg.shared_attn:
+        spec["shared"] = shared_attn_spec(cfg)
+    if not cfg.tie_embeddings:
+        spec["unembed"] = ly.unembed_spec(cfg.d_model, cfg.vocab_size)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Block application (full-sequence form: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_attn_block(cfg, bp, x, rules, positions, *, window, emit_cache):
+    h = ly.apply_norm(bp["attn_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    q, k, v = attn.project_qkv(cfg, bp["attn"], h, h, rules,
+                               positions, positions, use_rope=True)
+    o = attn.chunked_attention(q, k, v, causal=True, window=window,
+                               q_chunk=cfg.attn_q_chunk,
+                               kv_chunk=cfg.attn_kv_chunk,
+                               recompute_bwd=cfg.flash_bwd == "recompute")
+    x = x + attn.output_proj(bp["attn"], o, rules)
+    cache = attn.KVCache(k=k, v=v) if emit_cache else None
+    return x, cache
+
+
+def _apply_ffn(cfg, bp, x, rules, kind):
+    h = ly.apply_norm(bp["ffn_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    if kind == "attn_moe":
+        y, metrics = moem.moe_apply(cfg, bp["moe"], h, rules)
+    else:
+        y, metrics = mlpm.mlp_apply(cfg, bp["mlp"], h, rules), {}
+    return x + y, metrics
+
+
+def _apply_block(cfg, kind, bp, shared, x, rules, positions, *,
+                 window, emit_cache):
+    """Returns (x, cache_entry, metrics)."""
+    if kind in ("ssm", "shared_ssm"):
+        cache = None
+        if kind == "shared_ssm" and shared is not None:
+            x, cache = _apply_attn_block(
+                cfg, shared, x, rules, positions,
+                window=window, emit_cache=emit_cache,
+            )
+            x, _ = _apply_ffn(cfg, shared, x, rules, "attn_mlp")
+        h = ly.apply_norm(bp["norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+        if emit_cache:
+            y, sstate = ssmm.ssm_apply(cfg, bp["ssm"], h, rules,
+                                       return_state=True)
+            return x + y, {"kv": cache, "ssm": sstate}, {}
+        y = ssmm.ssm_apply(cfg, bp["ssm"], h, rules)
+        return x + y, None, {}
+
+    x, cache = _apply_attn_block(cfg, bp, x, rules, positions,
+                                 window=window, emit_cache=emit_cache)
+    x, metrics = _apply_ffn(cfg, bp, x, rules, kind)
+    entry = {"kv": cache, "ssm": None} if emit_cache else None
+    return x, entry, metrics
+
+
+# ---------------------------------------------------------------------------
+# Full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+class DecoderOutput(NamedTuple):
+    logits: jax.Array
+    metrics: dict
+    cache: Any          # stacked per-repeat cache tree (prefill) or None
+
+
+def forward(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,            # [B, S] int32
+    rules: Rules | None,
+    *,
+    window: int = 0,
+    emit_cache: bool = False,
+    remat: bool = False,
+    inputs_embeds: jax.Array | None = None,
+) -> DecoderOutput:
+    kinds = block_kinds(cfg)
+    shared = params.get("shared")
+    b, s = tokens.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = inputs_embeds if inputs_embeds is not None else ly.embed(
+        params["embed"], tokens, rules
+    )
+    x = x.astype(_dtype(cfg))
+
+    def body(carry, blk):
+        x = carry
+        caches, all_metrics = {}, {}
+        for i, kind in enumerate(kinds):
+            x, entry, metrics = _apply_block(
+                cfg, kind, blk[f"pos{i}"], shared, x, rules, positions,
+                window=window, emit_cache=emit_cache,
+            )
+            if emit_cache:
+                caches[f"pos{i}"] = entry
+            for k_, v_ in metrics.items():
+                all_metrics[f"{k_}"] = all_metrics.get(k_, 0.0) + v_
+        return x, (caches, all_metrics)
+
+    body_fn = body
+    if remat and cfg.remat_policy != "none":
+        if cfg.remat_policy == "dots":
+            body_fn = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        else:
+            body_fn = jax.checkpoint(body)
+    x, (caches, metrics) = jax.lax.scan(body_fn, x, params["blocks"])
+    x = ly.apply_norm(params["final_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    lg = ly.logits(params.get("unembed"), params["embed"], x, rules,
+                   tied=cfg.tie_embeddings)
+    metrics = {k_: jnp.mean(v_) for k_, v_ in metrics.items()}
+    return DecoderOutput(logits=lg, metrics=metrics,
+                         cache=caches if emit_cache else None)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token against stacked caches)
+# ---------------------------------------------------------------------------
+
+def decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    token: jax.Array,             # [B] int32
+    cache: Any,                   # stacked per-repeat cache tree
+    pos: jax.Array,               # [] int32 — tokens already in cache
+    rules: Rules | None,
+    *,
+    window: int = 0,
+) -> tuple[jax.Array, Any]:
+    kinds = block_kinds(cfg)
+    shared = params.get("shared")
+    b = token.shape[0]
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    x = ly.embed(params["embed"], token[:, None], rules).astype(_dtype(cfg))
+
+    def attn_decode(bp, x, entry):
+        h = ly.apply_norm(bp["attn_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+        q, k, v = attn.project_qkv(cfg, bp["attn"], h, h, rules,
+                                   positions, positions, use_rope=True)
+        kv: attn.KVCache = entry["kv"]
+        # Ring-buffer insert: a sliding-window cache is simply s_max == window
+        # (slot order stops mattering once the ring wraps — softmax is
+        # permutation-invariant and RoPE positions are absolute).
+        s_max = kv.k.shape[2]
+        kv = attn.cache_update(kv, k, v, pos % s_max)
+        # Pin the loop-carried cache to its declared sharding: without this,
+        # GSPMD propagation invents a partial kv-head sharding inside the
+        # loop and pays a full-cache all-gather at the loop boundary.
+        kv = attn.KVCache(
+            k=shard_act(kv.k, rules, "batch", "kv_heads", None, None),
+            v=shard_act(kv.v, rules, "batch", "kv_heads", None, None),
+        )
+        o = attn.decode_attention(q, kv, jnp.minimum(pos + 1, s_max))
+        return x + attn.output_proj(bp["attn"], o, rules), kv
+
+    def body(x, inp):
+        blk, centry = inp
+        new_entries = {}
+        for i, kind in enumerate(kinds):
+            bp = blk[f"pos{i}"]
+            entry = centry[f"pos{i}"]
+            if kind in ("ssm", "shared_ssm"):
+                new_kv = entry["kv"]
+                if kind == "shared_ssm" and shared is not None:
+                    x, new_kv = attn_decode(shared, x, entry)
+                    x, _ = _apply_ffn(cfg, shared, x, rules, "attn_mlp")
+                h = ly.apply_norm(bp["norm"], x, kind=cfg.norm,
+                                  eps=cfg.norm_eps)
+                y, new_ssm = ssmm.ssm_decode(cfg, bp["ssm"], h, entry["ssm"],
+                                             rules)
+                x = x + y
+                new_entries[f"pos{i}"] = {"kv": new_kv, "ssm": new_ssm}
+            else:
+                x, new_kv = attn_decode(bp, x, entry)
+                x, _ = _apply_ffn(cfg, bp, x, rules, kind)
+                new_entries[f"pos{i}"] = {"kv": new_kv, "ssm": entry["ssm"]}
+        return x, new_entries
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = ly.apply_norm(params["final_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    lg = ly.logits(params.get("unembed"), params["embed"], x, rules,
+                   tied=cfg.tie_embeddings)
+    return lg[:, 0, :], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (decode dry-run entry: allocate-free specs too)
+# ---------------------------------------------------------------------------
+
+def _entry_template(cfg, kind, batch, s_max, dtype, build):
+    kv = None
+    ssm_st = None
+    has_attn = kind in ("attn_mlp", "attn_moe") or (
+        kind == "shared_ssm" and cfg.shared_attn
+    )
+    if has_attn:
+        kv = (attn.init_cache if build == "zeros" else attn.cache_spec)(
+            cfg, batch, s_max, dtype
+        )
+    if kind in ("ssm", "shared_ssm"):
+        ssm_st = (ssmm.init_ssm_state if build == "zeros" else
+                  ssmm.ssm_state_spec)(cfg, batch, dtype)
+    return {"kv": kv, "ssm": ssm_st}
+
+
+def make_cache(cfg: ArchConfig, batch: int, s_max: int,
+               *, build: str = "zeros"):
+    """Stacked per-repeat decode cache.  build: zeros (real arrays for
+    tests/serving) | spec (ShapeDtypeStruct stand-ins for the dry-run)."""
+    kinds = block_kinds(cfg)
+    dtype = _dtype(cfg)
+    r = n_repeats(cfg)
+    entries = {
+        f"pos{i}": _entry_template(cfg, k, batch, s_max, dtype, build)
+        for i, k in enumerate(kinds)
+    }
+
+    def stack(leaf):
+        if build == "zeros":
+            return jnp.broadcast_to(leaf, (r,) + leaf.shape).copy()
+        return jax.ShapeDtypeStruct((r,) + leaf.shape, leaf.dtype)
+
+    return jax.tree.map(stack, entries)
+
+
+def cache_pspecs(cache_tree, rules: Rules):
+    """PartitionSpecs for a stacked cache tree (pattern-matched on the
+    cache container types): KV [R,B,Hkv,S,D], SSM h [R,B,di,N] /
+    conv [R,B,K-1,di]."""
+
+    def one(entry):
+        if isinstance(entry, attn.KVCache):
+            p = rules.pspec((None, "batch", "kv_heads", None, None),
+                            tuple(entry.k.shape))
+            return attn.KVCache(k=p, v=p)
+        if isinstance(entry, ssmm.SSMState):
+            return ssmm.SSMState(
+                h=rules.pspec((None, "batch", "d_inner", None),
+                              tuple(entry.h.shape)),
+                conv=rules.pspec((None, "batch", None, "d_inner"),
+                                 tuple(entry.conv.shape)),
+            )
+        raise TypeError(type(entry))
+
+    return jax.tree.map(
+        one, cache_tree,
+        is_leaf=lambda z: isinstance(z, (attn.KVCache, ssmm.SSMState)),
+    )

@@ -1,0 +1,3 @@
+from repro.optim import adamw, compression, schedules
+
+__all__ = ["adamw", "compression", "schedules"]

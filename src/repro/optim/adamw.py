@@ -1,0 +1,131 @@
+"""AdamW with global-norm clipping and ZeRO-1 state sharding.
+
+Functional (optax-style but self-contained): ``init`` builds the state tree,
+``update`` maps (grads, state, params) -> (new_params, new_state).
+
+ZeRO-1: optimizer moments follow the parameter sharding AND additionally
+shard their largest replicated dimension over the data axis when divisible
+(``zero_pspecs``) — under GSPMD the all-gather at use is inserted
+automatically, giving the standard optimizer-state-sharded memory profile.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import Rules
+from repro.models.spec import ParamSpec, pspec_tree
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params: Any) -> AdamWState:
+    f32_like = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(f32_like, params),
+        v=jax.tree.map(f32_like, params),
+    )
+
+
+def state_shapes(param_shapes: Any) -> AdamWState:
+    f = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamWState(
+        count=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(f, param_shapes),
+        v=jax.tree.map(f, param_shapes),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    *,
+    lr: jax.Array | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> tuple[Any, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def one(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1.0 - b1) * g
+        v_new = b2 * v + (1.0 - b2) * g * g
+        upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        upd = upd + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * upd
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(one, grads, state.m, state.v, params)
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "clip_scale": scale}
+    return new_params, AdamWState(count=count, m=new_m, v=new_v), metrics
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding of the moment trees
+# ---------------------------------------------------------------------------
+
+def zero_pspecs(spec_tree: Any, rules: Rules) -> Any:
+    """Moment-tree PartitionSpecs: param spec + largest replicated dim
+    sharded over the data axes (when divisible by the data-axis size)."""
+    data_axes = rules.batch_axes
+    data_size = 1
+    for a in data_axes:
+        data_size *= rules.mesh.shape[a]
+
+    def one(s: ParamSpec):
+        mesh_axes = [
+            rules._fit(rules.mesh_axis(a), d) for a, d in zip(s.axes, s.shape)
+        ]
+        # pick the largest dim that is unsharded and divisible
+        best, best_dim = -1, -1
+        for i, (n, ax) in enumerate(zip(s.shape, mesh_axes)):
+            if ax is None and n % data_size == 0 and n > best:
+                best, best_dim = n, i
+        if best_dim >= 0:
+            mesh_axes[best_dim] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return jax.sharding.PartitionSpec(*mesh_axes)
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def zero_state_pspecs(spec_tree: Any, rules: Rules) -> AdamWState:
+    moments = zero_pspecs(spec_tree, rules)
+    return AdamWState(
+        count=jax.sharding.PartitionSpec(),
+        m=moments,
+        v=moments,
+    )
+
+
+def param_pspecs(spec_tree: Any, rules: Rules) -> Any:
+    return pspec_tree(spec_tree, rules)

@@ -1,0 +1,115 @@
+"""Error-feedback gradient compression for cross-device reduction.
+
+At thousand-node scale the gradient all-reduce is the dominant cross-pod
+traffic; compressing it 4x (int8) or ~100x (top-k) with error feedback
+[Seide et al. 2014; Karimireddy et al. 2019] keeps convergence while cutting
+the collective term.
+
+Two codecs, both with an error-feedback residual carried in the train state
+(the compression error is added back to the next step's gradient, so the
+bias telescopes):
+
+  * int8  — per-tensor scale, stochastic rounding
+  * topk  — keep the k largest-|g| entries (as a dense mask under SPMD:
+            values zeroed, then psum — wire format on a real NIC would be
+            (indices, values); the SPMD simulation preserves the numerics)
+
+``compressed_psum`` applies codec -> psum -> decode inside shard_map; the
+DP trainer (repro.launch.train / examples) uses it over the data axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any  # pytree matching grads (f32)
+
+
+def ef_init(params: Any) -> EFState:
+    return EFState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def _quantize_int8(x: jax.Array, key: jax.Array):
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    scaled = x / scale
+    # stochastic rounding
+    noise = jax.random.uniform(key, x.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_mask(x: jax.Array, frac: float) -> jax.Array:
+    flat = x.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def compress_leaf(g: jax.Array, residual: jax.Array, key: jax.Array,
+                  *, method: str, topk_frac: float = 0.01):
+    """Returns (wire_value f32 — what crosses the network, new_residual)."""
+    acc = g.astype(jnp.float32) + residual
+    if method == "int8":
+        q, scale = _quantize_int8(acc, key)
+        wire = _dequantize_int8(q, scale)
+    elif method == "topk":
+        wire = acc * _topk_mask(acc, topk_frac)
+    elif method == "none":
+        wire = acc
+    else:
+        raise ValueError(method)
+    return wire, acc - wire
+
+
+def compressed_psum(
+    grads: Any,
+    ef: EFState,
+    key: jax.Array,
+    axis_name: str | tuple[str, ...],
+    *,
+    method: str = "int8",
+    topk_frac: float = 0.01,
+) -> tuple[Any, EFState]:
+    """Inside shard_map over the data axis: EF-compress local grads, psum
+    the wire values, return (mean-reduced grads, new EF state)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    res_leaves = jax.tree.leaves(ef.residual)
+    keys = jax.random.split(key, len(leaves))
+    n = jax.lax.psum(1, axis_name)
+    out, new_res = [], []
+    for g, r, k in zip(leaves, res_leaves, keys):
+        wire, res = compress_leaf(g, r, k, method=method, topk_frac=topk_frac)
+        out.append(jax.lax.psum(wire, axis_name) / n)
+        new_res.append(res)
+    return (
+        jax.tree.unflatten(treedef, out),
+        EFState(residual=jax.tree.unflatten(treedef, new_res)),
+    )
+
+
+def wire_bytes(grads: Any, *, method: str, topk_frac: float = 0.01) -> int:
+    """Bytes each device injects per reduction under the codec (the
+    collective-term input for the roofline)."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        if method == "int8":
+            total += n + 4                       # int8 payload + scale
+        elif method == "topk":
+            k = max(1, int(n * topk_frac))
+            total += k * (4 + 4)                 # (index, value) pairs
+        else:
+            total += n * 4
+    return total

@@ -1,0 +1,8 @@
+from repro.runtime.fault import (
+    FailureInjector,
+    InjectedFailure,
+    StepTimer,
+    TrainRunner,
+)
+
+__all__ = ["FailureInjector", "InjectedFailure", "StepTimer", "TrainRunner"]

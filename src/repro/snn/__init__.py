@@ -1,0 +1,6 @@
+"""repro.snn — HICANN-X chip model: AdEx/LIF neurons, synapse crossbar,
+background sources, and the multi-chip network wired through repro.core."""
+
+from repro.snn import network, neuron, sources, stdp, surrogate, synapse
+
+__all__ = ["network", "neuron", "sources", "stdp", "surrogate", "synapse"]

@@ -1,0 +1,297 @@
+"""Multi-chip spiking network: HICANN-X chips + PulseComm interconnect.
+
+Per-step protocol (time t):
+
+  1. pop delay-ring slot t        → input spike counts  [n_inputs]
+  2. add external input           (background generators / host stimulus)
+  3. crossbar matmul              → synaptic currents   [n_neurons]
+  4. neuron dynamics (LIF/AdEx)   → output spikes       [n_neurons]
+  5. spikes → events → PulseComm  → deposited into destination rings
+     (deadline = t + axonal delay >= t+1)
+  6. tick
+
+Two inter-chip communication paths:
+
+* ``event`` — the paper's path: events, routing LUT, buckets, all_to_all.
+  Exact integer semantics, finite capacities, explicit loss accounting.
+  Not differentiable (addresses are discrete).
+* ``dense`` — differentiable reference: the same routing table applied as a
+  scatter-add of float spike values into the destination rings (infinite
+  capacity).  Used for surrogate-gradient training and as the oracle in
+  equivalence tests: with no overflow/expiry the two paths deliver identical
+  integer spike counts (tests/test_network.py).
+
+Both a single-device multi-chip form (leading chip axis, used by CPU tests
+and examples) and a shard_map form (chips = mesh shards, ICI collectives —
+the production path that launch/dryrun lowers) are provided.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import delays as dl
+from repro.core import events as ev
+from repro.core import pulse_comm as pc
+from repro.core import routing as rt
+from repro.core import transport as tp
+from repro.snn import neuron as nr
+from repro.snn import synapse as sy
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    comm: pc.PulseCommConfig
+    neuron_model: str = "lif"          # "lif" | "adex"
+    comm_mode: str = "event"           # "event" | "dense"
+    record_voltage: bool = True
+
+    def __post_init__(self):
+        if self.neuron_model not in ("lif", "adex"):
+            raise ValueError(self.neuron_model)
+        if self.comm_mode not in ("event", "dense"):
+            raise ValueError(self.comm_mode)
+
+
+class NetworkParams(NamedTuple):
+    crossbar: sy.Crossbar        # w: [n_chips, n_inputs, n_neurons]
+    neuron: Any                  # LIFParams/AdExParams, leading chip axis
+    table: rt.RoutingTable       # [n_chips, n_neurons, K]
+
+
+class NetworkState(NamedTuple):
+    neuron: Any                  # LIFState/AdExState, leading chip axis
+    ring: dl.DelayRing           # ring:[n_chips, D, n_inputs] now:[n_chips]
+    t: jax.Array
+
+
+class StepRecord(NamedTuple):
+    spikes: jax.Array            # [n_chips, n_neurons] (f32 0/1)
+    voltage: jax.Array           # [n_chips, n_neurons]
+    stats: pc.CommStats
+
+
+def _neuron_fns(cfg: NetworkConfig):
+    if cfg.neuron_model == "lif":
+        return nr.lif_step, nr.lif_init
+    return nr.adex_step, nr.adex_init
+
+
+def init_params(
+    key: jax.Array,
+    cfg: NetworkConfig,
+    *,
+    table: rt.RoutingTable | None = None,
+    weight_scale: float = 0.3,
+) -> NetworkParams:
+    c = cfg.comm
+    k1, k2 = jax.random.split(key)
+    xb = jax.vmap(
+        lambda k: sy.init_crossbar(k, c.n_inputs_per_chip, c.neurons_per_chip,
+                                   scale=weight_scale)
+    )(jax.random.split(k1, c.n_chips))
+    if cfg.neuron_model == "lif":
+        nparams = nr.lif_params(c.neurons_per_chip)
+    else:
+        nparams = nr.adex_params(c.neurons_per_chip)
+    nparams = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (c.n_chips,) + x.shape), nparams
+    )
+    if table is None:
+        table = rt.random_table(k2, c.neurons_per_chip, c.n_chips,
+                                fanout=c.fanout, max_delay=c.ring_depth // 2)
+    if table.dest_chip.ndim == 2:  # broadcast one shared LUT to all chips
+        table = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (c.n_chips,) + x.shape), table
+        )
+    return NetworkParams(crossbar=xb, neuron=nparams, table=table)
+
+
+def init_state(cfg: NetworkConfig, params: NetworkParams) -> NetworkState:
+    c = cfg.comm
+    _, ninit = _neuron_fns(cfg)
+    nstate = jax.vmap(ninit)(params.neuron)
+    ring_dtype = jnp.float32 if cfg.comm_mode == "dense" else jnp.int32
+    ring = jax.vmap(
+        lambda _: dl.init(c.ring_depth, c.n_inputs_per_chip, dtype=ring_dtype)
+    )(jnp.arange(c.n_chips))
+    return NetworkState(neuron=nstate, ring=ring, t=jnp.asarray(0, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Dense (differentiable) communication path
+# ---------------------------------------------------------------------------
+
+def dense_route(
+    cfg: pc.PulseCommConfig,
+    spikes: jax.Array,            # [n_chips, n_neurons] float
+    table: rt.RoutingTable,       # [n_chips, n_neurons, K]
+    ring: dl.DelayRing,           # batched over chips
+    t: jax.Array,
+) -> dl.DelayRing:
+    """Apply the routing table as a differentiable scatter-add of spike
+    values into the destination delay rings (infinite capacity)."""
+    n_chips, n, k = table.dest_chip.shape
+    d = cfg.ring_depth
+    vals = (spikes[:, :, None] * table.valid).reshape(-1)          # [n_chips*N*K]
+    dest_chip = table.dest_chip.reshape(-1)
+    dest_addr = jnp.clip(table.dest_addr.reshape(-1), 0, cfg.n_inputs_per_chip - 1)
+    deadline = t + table.delay.reshape(-1)
+    slot = deadline % d
+    ok = (table.delay.reshape(-1) >= 1) & (table.delay.reshape(-1) <= d)
+    vals = jnp.where(ok, vals, 0.0)
+    new = ring.ring.at[dest_chip, slot, dest_addr].add(
+        vals.astype(ring.ring.dtype), mode="drop")
+    return dl.DelayRing(ring=new, now=ring.now)
+
+
+# ---------------------------------------------------------------------------
+# Single-device multi-chip step (leading chip axis)
+# ---------------------------------------------------------------------------
+
+def step(
+    cfg: NetworkConfig,
+    params: NetworkParams,
+    state: NetworkState,
+    ext_input: jax.Array,         # [n_chips, n_inputs] spike counts / rates
+) -> tuple[NetworkState, StepRecord]:
+    c = cfg.comm
+    nstep, _ = _neuron_fns(cfg)
+
+    ring, in_spikes = jax.vmap(dl.pop_current)(state.ring)
+    total_in = in_spikes.astype(jnp.float32) + ext_input
+    currents = jax.vmap(sy.currents)(params.crossbar, total_in)
+    nstate, spikes = jax.vmap(nstep)(state.neuron, currents, params.neuron)
+
+    if cfg.comm_mode == "dense":
+        ring = dense_route(c, spikes, params.table, ring, state.t)
+        stats = _zero_stats(c)
+    else:
+        ebs = jax.vmap(
+            lambda s: ev.from_spikes(s > 0.5, state.t, c.event_capacity)[0]
+        )(spikes)
+        ring, _delivered, stats = pc.multi_chip_step(c, ebs, params.table, ring)
+
+    ring = jax.vmap(dl.tick)(ring)
+    voltage = nstate.v if cfg.record_voltage else jnp.zeros_like(nstate.v)
+    new_state = NetworkState(neuron=nstate, ring=ring, t=state.t + 1)
+    return new_state, StepRecord(spikes=spikes, voltage=voltage, stats=stats)
+
+
+def _zero_stats(c: pc.PulseCommConfig) -> pc.CommStats:
+    z = jnp.zeros((c.n_chips,), jnp.int32)
+    return pc.CommStats(
+        sent=z, overflow=z, merge_dropped=z, expired=z,
+        utilization=jnp.zeros((c.n_chips,), jnp.float32),
+        wire_bytes=z, traffic=jnp.zeros((c.n_chips, c.n_chips), jnp.int32),
+    )
+
+
+def run(
+    cfg: NetworkConfig,
+    params: NetworkParams,
+    state: NetworkState,
+    ext_inputs: jax.Array,        # [T, n_chips, n_inputs]
+) -> tuple[NetworkState, StepRecord]:
+    """Scan the network over T steps; records stacked along time."""
+
+    def body(carry, ext):
+        new_state, rec = step(cfg, params, carry, ext)
+        return new_state, rec
+
+    return jax.lax.scan(body, state, ext_inputs)
+
+
+def run_plastic(
+    cfg: NetworkConfig,
+    params: NetworkParams,
+    state: NetworkState,
+    ext_inputs: jax.Array,        # [T, n_chips, n_inputs]
+    stdp_cfg=None,
+):
+    """On-chip learning run: crossbar weights evolve under STDP (BSS-2's
+    correlation-sensor + PPU loop).  Returns (final_params, final_state,
+    record, final_stdp_state).
+
+    Plasticity sees the *delivered* input spikes (ring output + external) as
+    the pre-synaptic events — i.e. learning acts after the Extoll transport,
+    matching the hardware where the correlation sensor sits in the synapse.
+    """
+    from repro.snn import stdp as stdp_mod
+
+    c = cfg.comm
+    scfg = stdp_cfg or stdp_mod.STDPConfig()
+    sstate = jax.vmap(lambda _: stdp_mod.init(c.n_inputs_per_chip,
+                                              c.neurons_per_chip))(
+        jnp.arange(c.n_chips))
+
+    def body(carry, ext):
+        net_state, w, st = carry
+        # replicate step() but with the carried (plastic) weights and
+        # visibility into the delivered input spikes
+        nstep, _ = _neuron_fns(cfg)
+        ring, in_spikes = jax.vmap(dl.pop_current)(net_state.ring)
+        total_in = in_spikes.astype(jnp.float32) + ext
+        currents = jax.vmap(sy.currents)(sy.Crossbar(w=w), total_in)
+        nstate, spikes = jax.vmap(nstep)(net_state.neuron, currents,
+                                         params.neuron)
+        st, w = jax.vmap(lambda s, pre, post, ww:
+                         stdp_mod.step(scfg, s, pre, post, ww))(
+            st, total_in, spikes, w)
+        if cfg.comm_mode == "dense":
+            ring = dense_route(c, spikes, params.table, ring, net_state.t)
+            stats = _zero_stats(c)
+        else:
+            ebs = jax.vmap(
+                lambda s: ev.from_spikes(s > 0.5, net_state.t,
+                                         c.event_capacity)[0])(spikes)
+            ring, _, stats = pc.multi_chip_step(c, ebs, params.table, ring)
+        ring = jax.vmap(dl.tick)(ring)
+        new_net = NetworkState(neuron=nstate, ring=ring, t=net_state.t + 1)
+        rec = StepRecord(spikes=spikes, voltage=nstate.v, stats=stats)
+        return (new_net, w, st), rec
+
+    (final_state, w_final, s_final), rec = jax.lax.scan(
+        body, (state, params.crossbar.w, sstate), ext_inputs)
+    final_params = params._replace(crossbar=sy.Crossbar(w=w_final))
+    return final_params, final_state, rec, s_final
+
+
+# ---------------------------------------------------------------------------
+# shard_map production step: chips = shards of the mesh "chip" axis
+# ---------------------------------------------------------------------------
+
+def shard_step(
+    cfg: NetworkConfig,
+    axis: str | tuple[str, ...],
+    params: NetworkParams,        # shard-local: no chip axis
+    state: NetworkState,
+    ext_input: jax.Array,         # [n_inputs]
+) -> tuple[NetworkState, StepRecord]:
+    """Per-shard step body — call inside shard_map over ``axis``.
+
+    Identical math to :func:`step` but with real ICI collectives: the
+    all_to_all inside ``pc.comm_step`` is the Extoll exchange.
+    """
+    c = cfg.comm
+    nstep, _ = _neuron_fns(cfg)
+    transport = tp.ShardMapTransport(axis=axis, n_chips=c.n_chips)
+
+    ring, in_spikes = dl.pop_current(state.ring)
+    total_in = in_spikes.astype(jnp.float32) + ext_input
+    currents = sy.currents(params.crossbar, total_in)
+    nstate, spikes = nstep(state.neuron, currents, params.neuron)
+
+    ebs, _ = ev.from_spikes(spikes > 0.5, state.t, c.event_capacity)
+    ring, _delivered, stats = pc.comm_step(c, transport, ebs, params.table, ring)
+    ring = dl.tick(ring)
+
+    voltage = nstate.v if cfg.record_voltage else jnp.zeros_like(nstate.v)
+    return (
+        NetworkState(neuron=nstate, ring=ring, t=state.t + 1),
+        StepRecord(spikes=spikes, voltage=voltage, stats=stats),
+    )

@@ -1,0 +1,137 @@
+"""Neuron dynamics: LIF and AdEx (the HICANN-X neuron circuit model).
+
+HICANN-X implements 512 AdEx (adaptive exponential integrate-and-fire)
+neuron circuits per chip; combining circuits raises the synaptic fan-in (up
+to 16k inputs/neuron).  We provide:
+
+* :func:`lif_step`  — leaky integrate-and-fire (the common reduced model;
+  also the Pallas kernel target, see ``repro.kernels.lif_step``);
+* :func:`adex_step` — the full AdEx two-variable dynamics;
+* both with surrogate-gradient spikes (:mod:`repro.snn.surrogate`) so the
+  training extension (BPTT through ``lax.scan``) works out of the box.
+
+All state is explicit (NamedTuples of arrays); parameters are per-neuron
+arrays to model BSS-2's per-circuit analog calibration.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.snn.surrogate import spike_surrogate
+
+
+class LIFParams(NamedTuple):
+    tau_m: jax.Array      # membrane time constant (steps)
+    v_th: jax.Array       # threshold
+    v_reset: jax.Array
+    v_rest: jax.Array
+    refrac: jax.Array     # refractory period (steps)
+
+
+class LIFState(NamedTuple):
+    v: jax.Array          # membrane potential
+    refrac: jax.Array     # remaining refractory steps (int32)
+
+
+def lif_init(params: LIFParams) -> LIFState:
+    return LIFState(v=params.v_rest * jnp.ones_like(params.tau_m),
+                    refrac=jnp.zeros(params.tau_m.shape, jnp.int32))
+
+
+def lif_params(
+    n: int, *, tau_m=10.0, v_th=1.0, v_reset=0.0, v_rest=0.0, refrac=2
+) -> LIFParams:
+    f = lambda x: jnp.full((n,), x, jnp.float32)
+    return LIFParams(tau_m=f(tau_m), v_th=f(v_th), v_reset=f(v_reset),
+                     v_rest=f(v_rest), refrac=jnp.full((n,), refrac, jnp.int32))
+
+
+def lif_step(
+    state: LIFState, current: jax.Array, params: LIFParams
+) -> tuple[LIFState, jax.Array]:
+    """One Euler step of LIF dynamics; returns (state, spikes[f32 0/1]).
+
+    Matches the Pallas kernel (repro/kernels/lif_step) bit-for-bit in f32.
+    """
+    decay = jnp.exp(-1.0 / params.tau_m)
+    active = state.refrac <= 0
+    v = jnp.where(
+        active,
+        params.v_rest + decay * (state.v - params.v_rest) + current,
+        state.v,
+    )
+    spikes = spike_surrogate(v - params.v_th) * active.astype(v.dtype)
+    spiked = spikes > 0.5
+    v_new = jnp.where(spiked, params.v_reset, v)
+    refrac_new = jnp.where(
+        spiked, params.refrac, jnp.maximum(state.refrac - 1, 0)
+    )
+    return LIFState(v=v_new, refrac=refrac_new), spikes
+
+
+class AdExParams(NamedTuple):
+    g_l: jax.Array        # leak conductance
+    e_l: jax.Array        # leak reversal
+    delta_t: jax.Array    # slope factor
+    v_t: jax.Array        # exponential threshold
+    v_peak: jax.Array     # spike detection
+    v_reset: jax.Array
+    tau_w: jax.Array      # adaptation time constant
+    a: jax.Array          # subthreshold adaptation
+    b: jax.Array          # spike-triggered adaptation
+    c_m: jax.Array        # membrane capacitance
+    refrac: jax.Array
+
+
+class AdExState(NamedTuple):
+    v: jax.Array
+    w: jax.Array
+    refrac: jax.Array
+
+
+def adex_init(params: AdExParams) -> AdExState:
+    return AdExState(v=params.e_l * jnp.ones_like(params.g_l),
+                     w=jnp.zeros_like(params.g_l),
+                     refrac=jnp.zeros(params.g_l.shape, jnp.int32))
+
+
+def adex_params(
+    n: int, *, g_l=0.1, e_l=0.0, delta_t=0.2, v_t=0.8, v_peak=1.2,
+    v_reset=0.0, tau_w=50.0, a=0.02, b=0.05, c_m=1.0, refrac=2,
+) -> AdExParams:
+    f = lambda x: jnp.full((n,), x, jnp.float32)
+    return AdExParams(
+        g_l=f(g_l), e_l=f(e_l), delta_t=f(delta_t), v_t=f(v_t),
+        v_peak=f(v_peak), v_reset=f(v_reset), tau_w=f(tau_w), a=f(a),
+        b=f(b), c_m=f(c_m), refrac=jnp.full((n,), refrac, jnp.int32),
+    )
+
+
+def adex_step(
+    state: AdExState, current: jax.Array, params: AdExParams
+) -> tuple[AdExState, jax.Array]:
+    """One Euler step of AdEx; returns (state, spikes).
+
+    The exponential term is clamped to keep Euler integration stable — the
+    analog circuit saturates similarly.
+    """
+    active = state.refrac <= 0
+    exp_term = params.g_l * params.delta_t * jnp.exp(
+        jnp.clip((state.v - params.v_t) / params.delta_t, -20.0, 10.0)
+    )
+    dv = (
+        -params.g_l * (state.v - params.e_l) + exp_term - state.w + current
+    ) / params.c_m
+    dw = (params.a * (state.v - params.e_l) - state.w) / params.tau_w
+    v = jnp.where(active, state.v + dv, state.v)
+    w = state.w + dw
+    spikes = spike_surrogate(v - params.v_peak) * active.astype(v.dtype)
+    spiked = spikes > 0.5
+    v_new = jnp.where(spiked, params.v_reset, jnp.minimum(v, params.v_peak + 1.0))
+    w_new = jnp.where(spiked, w + params.b, w)
+    refrac_new = jnp.where(spiked, params.refrac, jnp.maximum(state.refrac - 1, 0))
+    return AdExState(v=v_new, w=w_new, refrac=refrac_new), spikes

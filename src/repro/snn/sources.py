@@ -1,0 +1,25 @@
+"""Spike sources: Poisson background generators and regular drivers.
+
+HICANN-X provides on-chip background spike generators used to drive source
+populations (paper §4: "driven by external input or background generators").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def poisson_spikes(key: jax.Array, rate: jax.Array | float, shape: tuple[int, ...]) -> jax.Array:
+    """Bernoulli approximation of Poisson spiking at ``rate`` per step."""
+    return (jax.random.uniform(key, shape) < rate).astype(jnp.float32)
+
+
+def regular_spikes(t: jax.Array, period: int, shape: tuple[int, ...], phase: int = 0) -> jax.Array:
+    """Deterministic spike train with a fixed inter-spike interval."""
+    fire = (jnp.asarray(t) + phase) % period == 0
+    return jnp.broadcast_to(fire, shape).astype(jnp.float32)
+
+
+def step_current(t, onset: int, amplitude: float, shape: tuple[int, ...]) -> jax.Array:
+    return jnp.where(jnp.asarray(t) >= onset, amplitude, 0.0) * jnp.ones(shape, jnp.float32)

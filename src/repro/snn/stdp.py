@@ -1,0 +1,65 @@
+"""Pair-based STDP on the synapse crossbar (BSS-2 on-chip plasticity).
+
+HICANN-X pairs each synapse with an analog correlation sensor; the embedded
+PPUs read the accumulated pre/post correlations and update the 6-bit weights.
+The TPU-idiomatic adaptation keeps exponential eligibility traces per input
+row / output neuron and applies the update as two outer products per step —
+MXU work, exactly how the correlation sensors factorize:
+
+    x_pre  <- x_pre  * exp(-1/tau_plus)  + pre_spikes
+    x_post <- x_post * exp(-1/tau_minus) + post_spikes
+    dW = a_plus * outer(x_pre, post_spikes) - a_minus * outer(pre_spikes, x_post)
+
+(pre-before-post potentiates, post-before-pre depresses).  Weights clip to
+[w_min, w_max] — the 6-bit range of the hardware; pair with
+``synapse.quantize_weights`` to model the full fixed-point loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class STDPConfig:
+    tau_plus: float = 10.0
+    tau_minus: float = 10.0
+    a_plus: float = 0.01
+    a_minus: float = 0.012     # slight depression bias (stability)
+    w_min: float = -1.0
+    w_max: float = 1.0
+
+
+class STDPState(NamedTuple):
+    x_pre: jax.Array    # [n_inputs] eligibility trace of input rows
+    x_post: jax.Array   # [n_neurons] trace of output columns
+
+
+def init(n_inputs: int, n_neurons: int) -> STDPState:
+    return STDPState(x_pre=jnp.zeros((n_inputs,), jnp.float32),
+                     x_post=jnp.zeros((n_neurons,), jnp.float32))
+
+
+def step(
+    cfg: STDPConfig,
+    state: STDPState,
+    pre_spikes: jax.Array,    # [n_inputs]  (counts or 0/1)
+    post_spikes: jax.Array,   # [n_neurons]
+    w: jax.Array,             # [n_inputs, n_neurons]
+) -> tuple[STDPState, jax.Array]:
+    pre = pre_spikes.astype(jnp.float32)
+    post = post_spikes.astype(jnp.float32)
+    # Causality convention: within a simulation step, synaptic input drives
+    # the neuron (the LIF update is instantaneous), so a same-step pre+post
+    # pair is pre-BEFORE-post: the potentiation trace includes the current
+    # pre, while the depression trace must NOT include the current post.
+    x_pre = state.x_pre * jnp.exp(-1.0 / cfg.tau_plus) + pre
+    x_post_past = state.x_post * jnp.exp(-1.0 / cfg.tau_minus)
+    dw = (cfg.a_plus * jnp.outer(x_pre, post)
+          - cfg.a_minus * jnp.outer(pre, x_post_past))
+    w_new = jnp.clip(w + dw, cfg.w_min, cfg.w_max)
+    return STDPState(x_pre=x_pre, x_post=x_post_past + post), w_new

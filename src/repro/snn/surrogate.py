@@ -1,0 +1,31 @@
+"""Surrogate-gradient spike nonlinearity.
+
+Forward: Heaviside (exact 0/1 spikes, as the hardware emits).
+Backward: SuperSpike surrogate 1/(1+beta|x|)^2 [Zenke & Ganguli 2018], so the
+training extension can backpropagate through ``lax.scan`` over time (BSS-2
+itself trains in-the-loop with surrogate gradients; see Cramer et al. 2022).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SURROGATE_BETA = 10.0
+
+
+@jax.custom_vjp
+def spike_surrogate(x: jax.Array) -> jax.Array:
+    return (x > 0).astype(x.dtype)
+
+
+def _fwd(x):
+    return spike_surrogate(x), x
+
+
+def _bwd(x, g):
+    scale = 1.0 / (1.0 + SURROGATE_BETA * jnp.abs(x)) ** 2
+    return (g * scale,)
+
+
+spike_surrogate.defvjp(_fwd, _bwd)

@@ -1,0 +1,11 @@
+import os
+
+# Smoke tests and kernel tests must see the real (1-device) CPU platform.
+# Only launch/dryrun sets xla_force_host_platform_device_count, in its own
+# process.  Keep compilation deterministic and quiet.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,95 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "params": {"w": jax.random.normal(k1, (8, 4)),
+                   "b": jnp.zeros((4,), jnp.bfloat16)},
+        "opt": [jnp.arange(5), jax.random.normal(k2, (3,))],
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree(jax.random.PRNGKey(0))
+    ckpt.save(tree, str(tmp_path), 42)
+    assert ckpt.latest_step(str(tmp_path)) == 42
+    out = ckpt.restore(str(tmp_path), 42, tree)
+    _assert_tree_equal(tree, out)
+    # dtype preserved
+    assert out["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_restore_into_shape_structs(tmp_path):
+    tree = _tree(jax.random.PRNGKey(1))
+    ckpt.save(tree, str(tmp_path), 1)
+    target = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out = ckpt.restore(str(tmp_path), 1, target)
+    _assert_tree_equal(tree, out)
+
+
+def test_uncommitted_checkpoint_invisible(tmp_path):
+    tree = _tree(jax.random.PRNGKey(2))
+    ckpt.save(tree, str(tmp_path), 5)
+    # simulate a crash mid-write: tmp dir exists, no commit marker
+    os.makedirs(ckpt.step_dir(str(tmp_path), 9) + ".tmp")
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_gc_retention(tmp_path):
+    tree = _tree(jax.random.PRNGKey(3))
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tree, str(tmp_path), s)
+    ckpt.gc_old(str(tmp_path), keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    assert not os.path.exists(ckpt.step_dir(str(tmp_path), 3))
+    out = ckpt.restore(str(tmp_path), 4, tree)
+    _assert_tree_equal(tree, out)
+
+
+def test_async_checkpointer(tmp_path):
+    tree = _tree(jax.random.PRNGKey(4))
+    w = ckpt.AsyncCheckpointer(str(tmp_path))
+    for s in (10, 20):
+        w.save(tree, s)
+    w.close()
+    assert ckpt.latest_step(str(tmp_path)) == 20
+    _assert_tree_equal(tree, ckpt.restore(str(tmp_path), 10, tree))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    tree = _tree(jax.random.PRNGKey(5))
+    ckpt.save(tree, str(tmp_path), 0)
+    bad = dict(tree)
+    bad["params"] = {"w": jnp.zeros((9, 4)), "b": tree["params"]["b"]}
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), 0, bad)
+
+
+def test_elastic_reshard_on_load(tmp_path):
+    """N-device checkpoint loads onto a different mesh (1 device here) via
+    explicit shardings."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save(tree, str(tmp_path), 3)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    out = ckpt.restore(str(tmp_path), 3, tree, shardings=sh)
+    _assert_tree_equal(tree, out)
+    assert out["w"].sharding.is_equivalent_to(sh["w"], 2)

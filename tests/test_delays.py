@@ -1,0 +1,55 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import delays as dl
+
+
+@st.composite
+def deposits(draw):
+    depth = draw(st.integers(2, 16))
+    n_inputs = draw(st.integers(1, 16))
+    n_ev = draw(st.integers(0, 40))
+    addr = draw(st.lists(st.integers(0, n_inputs - 1), min_size=n_ev,
+                         max_size=n_ev))
+    ahead = draw(st.lists(st.integers(-3, 24), min_size=n_ev, max_size=n_ev))
+    return depth, n_inputs, addr, ahead
+
+
+@given(deposits())
+def test_ring_matches_naive_simulation(case):
+    depth, n_inputs, addr, ahead = case
+    now = 5
+    state = dl.init(depth, n_inputs, now=now)
+    deadline = jnp.asarray([now + a for a in ahead], jnp.int32)
+    valid = jnp.ones((len(addr),), dtype=bool)
+    state, expired = dl.deposit(state, jnp.asarray(addr, jnp.int32),
+                                deadline, valid)
+    # naive: deliverable iff now < deadline <= now+depth
+    naive_expired = sum(1 for a in ahead if not (0 < a <= depth))
+    assert int(expired) == naive_expired
+
+    # pop every future slot and compare against the naive schedule
+    delivered = {}
+    for t in range(now + 1, now + depth + 1):
+        state = dl.tick(state)
+        state, spikes = dl.pop_current(state)
+        delivered[t] = np.asarray(spikes)
+    for t in range(now + 1, now + depth + 1):
+        want = np.zeros(n_inputs, dtype=int)
+        for a, d in zip(addr, ahead):
+            if now + d == t and 0 < d <= depth:
+                want[a] += 1
+        np.testing.assert_array_equal(delivered[t], want, err_msg=f"t={t}")
+
+
+def test_pop_zeroes_slot():
+    state = dl.init(4, 3, now=0)
+    state, _ = dl.deposit(state, jnp.asarray([1]), jnp.asarray([2]),
+                          jnp.asarray([True]))
+    state = dl.tick(state)   # now=1
+    state = dl.tick(state)   # now=2
+    state, s1 = dl.pop_current(state)
+    assert int(s1[1]) == 1
+    state, s2 = dl.pop_current(state)
+    assert int(s2[1]) == 0

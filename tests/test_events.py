@@ -1,0 +1,55 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import events as ev
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_wrap8_projects_to_8bit(t):
+    w = int(ev.wrap8(jnp.asarray(t)))
+    assert 0 <= w < 256
+    assert w == t % 256
+
+
+@given(st.integers(0, 10**6), st.integers(-127, 127))
+def test_wrap8_diff_recovers_small_deltas(base, delta):
+    a, b = base + delta, base
+    d = int(ev.wrap8_diff(ev.wrap8(jnp.asarray(a)), ev.wrap8(jnp.asarray(b))))
+    assert d == delta
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=64))
+def test_from_spikes_roundtrip(bits):
+    spikes = jnp.asarray(bits, dtype=bool)
+    n = spikes.shape[0]
+    buf, dropped = ev.from_spikes(spikes, 3, capacity=n)
+    assert int(dropped) == 0
+    dense = ev.to_dense(buf, n)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(spikes, int))
+    assert int(buf.count()) == int(spikes.sum())
+    # timestamps all equal the emission step
+    assert np.all(np.asarray(buf.time)[np.asarray(buf.valid)] == 3)
+
+
+def test_from_spikes_rate_limit_drops_surplus():
+    spikes = jnp.ones((16,), dtype=bool)
+    buf, dropped = ev.from_spikes(spikes, 0, capacity=10)
+    assert int(buf.count()) == 10
+    assert int(dropped) == 6
+
+
+def test_from_spikes_preserves_address_order():
+    spikes = jnp.asarray([0, 1, 0, 1, 1, 0, 0, 1], dtype=bool)
+    buf, _ = ev.from_spikes(spikes, 0, capacity=8)
+    addrs = np.asarray(buf.addr)[np.asarray(buf.valid)]
+    np.testing.assert_array_equal(addrs, [1, 3, 4, 7])
+
+
+def test_empty_and_concat():
+    a = ev.empty(4)
+    b = ev.from_arrays([1, 2], [5, 5])
+    c = ev.concat(a, b)
+    assert c.capacity == 6
+    assert int(c.count()) == 2

@@ -1,0 +1,100 @@
+"""The loop-aware HLO analyzer must multiply while-body costs by trip count
+— validated against programs with analytically known FLOPs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_stats
+
+
+def _analyze(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return hlo_stats.analyze(compiled.as_text())
+
+
+def test_single_matmul_flops():
+    m, k, n = 128, 256, 64
+    a = jnp.zeros((m, k), jnp.float32)
+    b = jnp.zeros((k, n), jnp.float32)
+    st = _analyze(lambda x, y: x @ y, a, b)
+    assert abs(st.flops - 2 * m * k * n) / (2 * m * k * n) < 0.05
+
+
+def test_scan_multiplies_by_trip_count():
+    trips = 17
+    m = 64
+    a = jnp.zeros((m, m), jnp.float32)
+
+    def fn(x):
+        def body(c, _):
+            return c @ a, None
+
+        y, _ = jax.lax.scan(body, x, None, length=trips)
+        return y
+
+    st = _analyze(fn, jnp.zeros((m, m), jnp.float32))
+    want = 2 * m * m * m * trips
+    assert abs(st.flops - want) / want < 0.05, (st.flops, want)
+
+
+def test_nested_scan_multiplies():
+    t_out, t_in, m = 5, 7, 32
+    a = jnp.zeros((m, m), jnp.float32)
+
+    def fn(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ a, None
+
+            ci, _ = jax.lax.scan(inner, c, None, length=t_in)
+            return ci, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=t_out)
+        return y
+
+    st = _analyze(fn, jnp.zeros((m, m), jnp.float32))
+    want = 2 * m**3 * t_out * t_in
+    assert abs(st.flops - want) / want < 0.05
+
+
+def test_batched_dot_flops():
+    b, m, k, n = 4, 32, 64, 16
+    x = jnp.zeros((b, m, k), jnp.float32)
+    y = jnp.zeros((b, k, n), jnp.float32)
+    st = _analyze(lambda p, q: jnp.einsum("bmk,bkn->bmn", p, q), x, y)
+    want = 2 * b * m * k * n
+    assert abs(st.flops - want) / want < 0.05
+
+
+def test_hbm_bytes_lower_bounded_by_io():
+    n = 1 << 18
+    x = jnp.zeros((n,), jnp.float32)
+    st = _analyze(lambda v: v * 2.0 + 1.0, x)
+    assert st.hbm_bytes >= 2 * n * 4  # read + write at least
+
+
+def test_collectives_zero_on_single_device():
+    st = _analyze(lambda v: v + 1.0, jnp.zeros((8,)))
+    assert st.total_collective_bytes == 0
+
+
+def test_bf16_dot_flops_counted():
+    """Regression: 'bf16[...]' must parse (two-letter dtype) — a bf16-lhs
+    matmul's contracting dim must not silently collapse to 1."""
+    m, k, n = 64, 128, 32
+    a = jnp.zeros((m, k), jnp.bfloat16)
+    b = jnp.zeros((k, n), jnp.bfloat16)
+    st = _analyze(lambda x, y: (x @ y).astype(jnp.float32), a, b)
+    want = 2 * m * k * n
+    assert st.flops >= 0.9 * want, (st.flops, want)
+    # and bf16 bytes are counted
+    assert st.hbm_bytes >= (m * k + k * n) * 2
+
+
+def test_shape_regex_dtypes():
+    from repro.launch.hlo_stats import _SHAPE_RE
+
+    s = "bf16[2,3]{1,0} f32[4] pred[7] s32[1,2] f8e4m3fn[5] u16[9]"
+    got = {m.group(1) for m in _SHAPE_RE.finditer(s)}
+    assert got == {"bf16", "f32", "pred", "s32", "f8e4m3fn", "u16"}

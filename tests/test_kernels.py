@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret on CPU) vs jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bucket_pack import bucket_pack
+from repro.kernels.bucket_pack.ref import bucket_pack_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.lif_step import lif_step
+from repro.kernels.lif_step.ref import lif_step_ref
+from repro.kernels.ssm_scan import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+@pytest.mark.parametrize("e,b,c", [(64, 2, 4), (512, 8, 16), (777, 5, 8),
+                                   (1536, 16, 128), (100, 1, 8)])
+def test_bucket_pack_matches_ref(e, b, c):
+    key = jax.random.PRNGKey(e * b * c)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    bid = jax.random.randint(k1, (e,), 0, b)
+    addr = jax.random.randint(k2, (e,), 0, 1 << 14)
+    dead = jax.random.randint(k3, (e,), 0, 256)
+    valid = jax.random.uniform(k4, (e,)) < 0.6
+    got = bucket_pack(bid, addr, dead, valid, n_buckets=b, capacity=c)
+    want = bucket_pack_ref(bid, addr, dead, valid, n_buckets=b, capacity=c)
+    np.testing.assert_array_equal(np.asarray(got.addr), np.asarray(want.addr))
+    np.testing.assert_array_equal(np.asarray(got.deadline),
+                                  np.asarray(want.deadline))
+    np.testing.assert_array_equal(np.asarray(got.valid),
+                                  np.asarray(want.valid))
+    np.testing.assert_array_equal(np.asarray(got.counts),
+                                  np.asarray(want.counts))
+    assert int(got.overflow) == int(want.overflow)
+
+
+@pytest.mark.parametrize("shape", [(64,), (1024,), (3, 333), (2, 5, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_lif_step_matches_ref(shape, dtype):
+    key = jax.random.PRNGKey(int(np.prod(shape)))
+    ks = jax.random.split(key, 3)
+    v = jax.random.normal(ks[0], shape, dtype)
+    refrac = jax.random.randint(ks[1], shape, 0, 3)
+    cur = jax.random.normal(ks[2], shape, dtype) * 0.5
+    args = (v, refrac, cur, jnp.full(shape, 10.0, dtype),
+            jnp.full(shape, 1.0, dtype), jnp.zeros(shape, dtype),
+            jnp.zeros(shape, dtype), jnp.full(shape, 2, jnp.int32))
+    got = lif_step(*args)
+    want = lif_step_ref(*args)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), rtol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,skv,d,causal",
+    [
+        (1, 4, 4, 128, 128, 64, True),
+        (2, 8, 2, 128, 256, 64, True),
+        (1, 4, 1, 130, 190, 32, True),    # padding path
+        (1, 2, 2, 128, 128, 128, False),
+        (2, 4, 2, 256, 128, 64, False),
+    ],
+)
+def test_flash_attention_matches_ref(b, hq, hkv, sq, skv, d, causal):
+    key = jax.random.PRNGKey(b * sq * skv)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, hq, sq, d), jnp.float32)
+    k = jax.random.normal(k2, (b, hkv, skv, d), jnp.float32)
+    v = jax.random.normal(k3, (b, hkv, skv, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, force_kernel=True)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(9)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (1, 2, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(k2, (1, 2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(k3, (1, 2, 128, 64), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, force_kernel=True)
+    want = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=3e-2)
+
+
+@pytest.mark.parametrize("b,t,din,n", [(1, 128, 128, 16), (2, 130, 100, 8),
+                                       (1, 64, 256, 64)])
+def test_ssm_scan_matches_ref(b, t, din, n):
+    key = jax.random.PRNGKey(b * t * din)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (b, t, din))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, din)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (din, n)) * 0.5)
+    Bm = jax.random.normal(ks[3], (b, t, n))
+    Cm = jax.random.normal(ks[4], (b, t, n))
+    D = jax.random.normal(ks[5], (din,))
+    got = ssm_scan(x, dt, A, Bm, Cm, D, force_kernel=True)
+    want = ssm_scan_ref(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssm_scan_decode_parity_with_model_path():
+    """kernels/ssm_scan oracle == models/ssm.scan_chunked (shared contract)."""
+    from repro.models.ssm import scan_chunked
+
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 6)
+    b, t, din, n = 2, 48, 32, 8
+    x = jax.random.normal(ks[0], (b, t, din))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, din)))
+    A = -jnp.exp(jax.random.normal(ks[2], (din, n)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, t, n))
+    Cm = jax.random.normal(ks[4], (b, t, n))
+    D = jax.random.normal(ks[5], (din,))
+    want = ssm_scan_ref(x, dt, A, Bm, Cm, D)
+    h0 = jnp.zeros((b, din, n), jnp.float32)
+    got, _ = scan_chunked(x, dt, A, Bm, Cm, D, h0, unroll=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

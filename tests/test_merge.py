@@ -1,0 +1,56 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import merge as mg
+
+
+@st.composite
+def stream_sets(draw):
+    s = draw(st.integers(1, 6))
+    c = draw(st.integers(1, 10))
+    deadlines = draw(st.lists(
+        st.lists(st.integers(0, 50), min_size=c, max_size=c),
+        min_size=s, max_size=s))
+    valid = draw(st.lists(
+        st.lists(st.booleans(), min_size=c, max_size=c),
+        min_size=s, max_size=s))
+    return (jnp.asarray(deadlines, jnp.int32), jnp.asarray(valid, dtype=bool))
+
+
+@given(stream_sets())
+def test_merge_streams_sorted_and_conserving(case):
+    dead, valid = case
+    addr = jnp.arange(dead.size, dtype=jnp.int32).reshape(dead.shape)
+    a, d, v = mg.merge_streams(addr, dead, valid)
+    n_in = int(valid.sum())
+    assert int(v.sum()) == n_in
+    dv = np.asarray(d)[np.asarray(v)]
+    assert np.all(np.diff(dv) >= 0), "merged stream must be time-ordered"
+    # valid lanes compacted to the front
+    vv = np.asarray(v)
+    assert not np.any(vv[n_in:])
+    # multiset of addresses preserved
+    got = sorted(np.asarray(a)[vv].tolist())
+    want = sorted(np.asarray(addr)[np.asarray(valid)].tolist())
+    assert got == want
+
+
+@given(stream_sets(), st.integers(1, 8), st.integers(1, 16))
+def test_rate_limited_merge_conserves(case, rate, depth):
+    dead, valid = case
+    addr = jnp.arange(dead.size, dtype=jnp.int32).reshape(dead.shape)
+    buf = mg.merge_init(depth)
+    emitted = 0
+    dropped = 0
+    for _ in range(dead.size // rate + depth + 2):
+        buf, (oa, od, ov), drop = mg.merge_step(
+            buf, addr, dead, valid, rate=rate)
+        emitted += int(ov.sum())
+        dropped += int(drop)
+        addr = jnp.zeros_like(addr)
+        dead = jnp.zeros_like(dead)
+        valid = jnp.zeros_like(valid)
+    n_in = int(case[1].sum())
+    assert emitted + dropped == n_in
+    assert int(buf.occupancy()) == 0

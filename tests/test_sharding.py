@@ -1,0 +1,108 @@
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.sharding import Rules, from_mesh
+
+
+def _mesh2(shape=(1, 1), axes=("data", "model")):
+    devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+class FakeMesh:
+    """Shape-only stand-in so divisibility logic is testable without 256
+    devices."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def _rules(data=16, model=16, pod=None):
+    shape = {"data": data, "model": model}
+    batch = ("data",)
+    if pod:
+        shape = {"pod": pod, **shape}
+        batch = ("pod", "data")
+    return Rules(mesh=FakeMesh(shape), batch_axes=batch)
+
+
+def test_divisible_dims_shard():
+    r = _rules()
+    assert r.pspec(("batch", None, "heads"), (256, 4096, 32)) == \
+        P("data", None, "model")
+
+
+def test_non_divisible_tensor_dim_replicates():
+    r = _rules()
+    # kv_heads = 8 cannot shard 16 ways -> replicated (Megatron KV behavior)
+    assert r.pspec(("batch", "kv_heads"), (256, 8)) == P("data", None)
+
+
+def test_batch_fallback_pod_to_data():
+    r = _rules(pod=2)
+    # 32 devices on ("pod","data") but batch=16 -> only "data" fits
+    assert r.pspec(("batch",), (16,)) == P("data")
+    # batch=32 -> both axes
+    assert r.pspec(("batch",), (32,)) == P(("pod", "data"))
+    # batch=1 -> replicated
+    assert r.pspec(("batch",), (1,)) == P(None)
+
+
+def test_vocab_divisibility():
+    r = _rules()
+    assert r.pspec((None, "vocab"), (1024, 49155)) == P(None, None)
+    assert r.pspec((None, "vocab"), (1024, 202048)) == P(None, "model")
+
+
+def test_from_mesh_detects_pod_axis():
+    m = _mesh2((1, 1), ("data", "model"))
+    assert from_mesh(m).batch_axes == ("data",)
+
+
+def test_kv_factored_rules():
+    r = Rules(mesh=FakeMesh({"data": 16, "kv": 8, "mp": 2}),
+              batch_axes=("data",), tensor_axis=("kv", "mp"), kv_axis="kv")
+    # kv_heads=8 shards exactly on the kv sub-axis
+    assert r.pspec(("batch", "kv_heads", None, None), (128, 8, 32768, 128)) \
+        == P("data", "kv", None, None)
+    # q heads / ff use the combined 16-way tier
+    assert r.pspec((None, "heads", None), (4096, 32, 128)) \
+        == P(None, ("kv", "mp"), None)
+
+
+def test_shard_noop_without_rules():
+    import jax.numpy as jnp
+    from repro.models.sharding import shard
+
+    x = jnp.zeros((4, 4))
+    assert shard(x, None, "batch", None) is x
+
+
+def test_param_pspecs_cover_every_leaf():
+    import repro.configs as C
+    from repro.models import lm
+
+    r = _rules()
+    for arch in ("llama4-maverick-400b-a17b", "whisper-medium",
+                 "falcon-mamba-7b", "zamba2-2.7b"):
+        cfg = C.get(arch)
+        shapes = lm.param_shapes(cfg)
+        pspecs = lm.param_pspecs(cfg, r)
+        s_leaves = jax.tree.leaves(shapes)
+        p_leaves = jax.tree.leaves(
+            pspecs, is_leaf=lambda x: isinstance(x, P))
+        assert len(s_leaves) == len(p_leaves)
+        for sds, ps in zip(s_leaves, p_leaves):
+            assert len(ps) <= len(sds.shape)
+            # every sharded dim must divide
+            for dim, axis in zip(sds.shape, tuple(ps) + (None,) * 9):
+                if axis is None:
+                    continue
+                axes = (axis,) if isinstance(axis, str) else axis
+                prod = 1
+                for a in axes:
+                    prod *= {"data": 16, "model": 16, "pod": 2}[a]
+                assert dim % prod == 0, (arch, sds.shape, ps)
