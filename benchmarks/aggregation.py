@@ -22,6 +22,7 @@ from repro.core import events as ev
 from repro.core import merge as mg
 from repro.core import pulse_comm as pc
 from repro.core import routing as rt
+from repro.core.fabric import FlowControlConfig, PulseFabric
 
 
 def sweep_capacity(n_chips=8, n_neurons=256, rate=0.2, capacities=(2, 4, 8, 16, 32, 64),
@@ -41,7 +42,8 @@ def sweep_capacity(n_chips=8, n_neurons=256, rate=0.2, capacities=(2, 4, 8, 16, 
         )
         rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
             jnp.arange(n_chips))
-        step = jax.jit(lambda e, t, r: pc.multi_chip_step(cfg, e, t, r))
+        fab = PulseFabric(cfg, transport="local")
+        step = jax.jit(lambda e, t, r: fab.step(e, t, r)[:3])
         new_rings, _, stats = step(ebs, tables, rings)
         jax.block_until_ready(new_rings.ring)
         t0 = time.perf_counter()
@@ -88,6 +90,41 @@ def merge_congestion(capacities=(4, 8, 16, 32), rate_limit=16, seed=1):
     return rows
 
 
+def flow_backpressure(capacities=(1, 2, 4, 8), drain_rate=2, n_chips=4,
+                      n_neurons=128, rate=0.5, steps=8, seed=3):
+    """NHTL-Extoll credit gate: sweep the in-flight packet budget and
+    measure how many events stall at the source per step (back-pressure),
+    with the credit state threaded across steps."""
+    key = jax.random.PRNGKey(seed)
+    table = rt.random_table(key, n_neurons, n_chips, max_delay=12)
+    tables = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_chips,) + x.shape), table)
+    spikes = jax.random.uniform(key, (n_chips, n_neurons)) < rate
+    ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, n_neurons)[0])(spikes)
+    rows = []
+    for cap in capacities:
+        cfg = pc.PulseCommConfig(
+            n_chips=n_chips, neurons_per_chip=n_neurons,
+            n_inputs_per_chip=n_neurons, event_capacity=n_neurons,
+            bucket_capacity=16, buckets_per_chip=4, ring_depth=16,
+        )
+        fab = PulseFabric(cfg, transport="local",
+                          flow=FlowControlConfig(capacity=cap,
+                                                 drain_rate=drain_rate))
+        rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
+            jnp.arange(n_chips))
+        flow = fab.init_flow()
+        step = jax.jit(fab.step)
+        stalled = sent = 0
+        for _ in range(steps):
+            rings, _, stats, flow = step(ebs, tables, rings, flow)
+            stalled += int(stats.stalled.sum())
+            sent += int(stats.sent.sum())
+        rows.append({"credits": cap,
+                     "stall_frac": stalled / max(sent, 1)})
+    return rows
+
+
 def message_rate_scaling(chip_counts=(2, 4, 8, 16), n_neurons=128, rate=0.3,
                          seed=2):
     key = jax.random.PRNGKey(seed)
@@ -105,7 +142,8 @@ def message_rate_scaling(chip_counts=(2, 4, 8, 16), n_neurons=128, rate=0.3,
         ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, n_neurons)[0])(spikes)
         rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
             jnp.arange(n_chips))
-        step = jax.jit(lambda e, t, r: pc.multi_chip_step(cfg, e, t, r))
+        fab = PulseFabric(cfg, transport="local")
+        step = jax.jit(lambda e, t, r: fab.step(e, t, r)[:3])
         out = step(ebs, tables, rings)
         jax.block_until_ready(out[0].ring)
         t0 = time.perf_counter()
@@ -132,6 +170,9 @@ def main(csv=True):
     for r in merge_congestion():
         out.append(("merge_congestion_cap_%d" % r["capacity"], 0.0,
                     f"peak_queue={r['peak_queue']};drops={r['merge_drops']}"))
+    for r in flow_backpressure():
+        out.append(("flow_backpressure_credits_%d" % r["credits"], 0.0,
+                    f"stall_frac={r['stall_frac']:.3f}"))
     for r in message_rate_scaling():
         out.append(("message_rate_%dchips" % r["n_chips"], r["us_per_step"],
                     f"mev_s={r['mevents_per_s']:.3f}"))

@@ -1,5 +1,10 @@
 """Benchmark: end-to-end pulse latency (the paper's latency axis) and the
-ISI-doubling timing relation of the NICE demo (§4, Fig. 2)."""
+ISI-doubling timing relation of the NICE demo (§4, Fig. 2).
+
+Both experiments drive the network through the unified PulseFabric engine
+(snn.network's single step body); hop latency additionally sweeps the
+credit-flow-control budget to show back-pressure does not alter timing when
+credits are ample."""
 
 from __future__ import annotations
 
@@ -9,6 +14,7 @@ import numpy as np
 
 from repro.core import pulse_comm as pc
 from repro.core import routing as rt
+from repro.core.fabric import FlowControlConfig
 from repro.snn import network as net
 
 
@@ -39,15 +45,18 @@ def isi_demo(n=64, delay=2, T=64):
     }
 
 
-def hop_latency(hops=(1, 2, 3, 4), delay=2, n=32):
-    """Latency through a chain of chips (one exchange per hop)."""
+def hop_latency(hops=(1, 2, 3, 4), delay=2, n=32, flow=None):
+    """Latency through a chain of chips (one exchange per hop).
+
+    ``flow`` optionally enables the credit gate; with an ample budget the
+    hop latency must be unchanged (credits never run out)."""
     rows = []
     for n_hops in hops:
         n_chips = n_hops + 1
         comm = pc.PulseCommConfig(n_chips=n_chips, neurons_per_chip=n,
                                   n_inputs_per_chip=n, event_capacity=n,
                                   bucket_capacity=n, ring_depth=8)
-        cfg = net.NetworkConfig(comm=comm)
+        cfg = net.NetworkConfig(comm=comm, flow=flow)
         tables = []
         for chip in range(n_chips):
             t = rt.feedforward_table(n, src_chip=chip,
@@ -81,6 +90,10 @@ def main(csv=True):
                 f"isi_src={d['isi_source']:.1f};isi_dst={d['isi_target']:.1f};latency={d['first_spike_latency']}"))
     for r in hop_latency():
         out.append((f"hop_latency_{r['hops']}", 0.0,
+                    f"steps={r['latency_steps']};expected={r['expected']}"))
+    ample = FlowControlConfig(capacity=16, drain_rate=16)
+    for r in hop_latency(flow=ample):
+        out.append((f"hop_latency_flow_{r['hops']}", 0.0,
                     f"steps={r['latency_steps']};expected={r['expected']}"))
     if csv:
         for name, us, derived in out:

@@ -16,6 +16,7 @@ from repro.core import delays as dl
 from repro.core import events as ev
 from repro.core import pulse_comm as pc
 from repro.core import routing as rt
+from repro.core.fabric import PulseFabric
 
 
 def sweep(delays=(1, 2, 4, 8), agg_steps=(0, 1, 2, 4, 8), n=128, n_chips=4,
@@ -37,7 +38,8 @@ def sweep(delays=(1, 2, 4, 8), agg_steps=(0, 1, 2, 4, 8), n=128, n_chips=4,
             rings = jax.vmap(
                 lambda _: dl.init(cfg.ring_depth, n, now=hold)
             )(jnp.arange(n_chips))
-            _, _, stats = pc.multi_chip_step(cfg, ebs, tables, rings)
+            _, _, stats, _ = PulseFabric(cfg, transport="local").step(
+                ebs, tables, rings)
             sent = int(stats.sent.sum())
             rows.append({
                 "delay_budget": d,

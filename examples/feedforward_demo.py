@@ -1,9 +1,9 @@
 """The paper's NICE-2022 technical demonstration (§4, Fig. 2):
 
 A population on chip 0, driven by regular background input, projects through
-the Extoll-analogue network onto chip 1, whose neurons are configured to
-need TWO input spikes per output spike — so the inter-spike interval doubles
-from source to target.  We record the "oscilloscope traces" (membrane
+the Extoll-analogue network (the unified PulseFabric engine) onto chip 1,
+whose neurons are configured to need TWO input spikes per output spike — so
+the inter-spike interval doubles from source to target.  We record the "oscilloscope traces" (membrane
 voltages at the analog probing pins) and the event-timing relation.
 
   PYTHONPATH=src python examples/feedforward_demo.py
@@ -62,6 +62,7 @@ stats = rec.stats
 print(f"\nnetwork: {int(np.asarray(stats.sent).sum())} events routed, "
       f"{int(np.asarray(stats.overflow).sum())} overflow, "
       f"{int(np.asarray(stats.expired).sum())} expired, "
+      f"{int(np.asarray(stats.stalled).sum())} stalled, "
       f"mean utilization {float(np.asarray(stats.utilization).mean()):.2f}")
 assert abs(np.diff(dst_t).mean() - 2 * np.diff(src_t).mean()) < 1e-6
 print("ISI doubling REPRODUCED")

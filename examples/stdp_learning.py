@@ -1,6 +1,7 @@
 """On-chip plasticity over the interconnect: STDP learns which input
 pathway causes postsynaptic firing, while spikes keep flowing through the
-full Extoll-analogue pipeline.
+full Extoll-analogue pipeline (one PulseFabric step body shared with the
+plain and shard_map runs).
 
   PYTHONPATH=src python examples/stdp_learning.py
 """
@@ -37,6 +38,7 @@ new_params, _, rec, _ = jax.jit(
 w = np.asarray(new_params.crossbar.w[0])
 print(f"pathway A (causal)  mean weight: 0.300 -> {w[:N//2].mean():.3f}")
 print(f"pathway B (noise)   mean weight: 0.300 -> {w[N//2:].mean():.3f}")
-print(f"events routed chip0->chip1: {int(np.asarray(rec.stats.sent).sum())}")
+print(f"events routed chip0->chip1: {int(np.asarray(rec.stats.sent).sum())} "
+      f"(stalled {int(np.asarray(rec.stats.stalled).sum())})")
 assert w[:N // 2].mean() > w[N // 2:].mean()
 print("STDP separated the causal pathway while pulses crossed the network.")

@@ -65,7 +65,8 @@ def _decode_array(arr: np.ndarray, dtype_name: str) -> np.ndarray:
 
 
 def _flatten_with_paths(tree: Any):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists on newer jax; use tree_util.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     items = []
     for path, leaf in flat:
         key = "/".join(_path_str(p) for p in path)

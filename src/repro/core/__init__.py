@@ -1,8 +1,31 @@
 """repro.core — the paper's contribution: table-routed, deadline-bounded,
 bucket-aggregated inter-chip pulse communication (BSS-2 over Extoll), as
-composable JAX modules."""
+composable JAX modules.
 
-from repro.core import buckets, delays, events, flowcontrol, merge, routing, transport
+The one entry point for running the pipeline is
+:class:`repro.core.fabric.PulseFabric` — a transport-agnostic engine whose
+single step body covers the single-device ("local") and shard_map paths,
+optional NHTL-Extoll credit flow control, and both the simplified and full
+(merge) operating modes.  ``comm_step`` / ``multi_chip_step`` remain as
+deprecated shims.
+"""
+
+from repro.core import (
+    buckets,
+    delays,
+    events,
+    fabric,
+    flowcontrol,
+    merge,
+    routing,
+    transport,
+)
+from repro.core.fabric import (
+    FabricResult,
+    FlowControlConfig,
+    PulseFabric,
+    register_transport,
+)
 from repro.core.pulse_comm import (
     CommStats,
     Delivered,
@@ -15,13 +38,18 @@ __all__ = [
     "buckets",
     "delays",
     "events",
+    "fabric",
     "flowcontrol",
     "merge",
     "routing",
     "transport",
     "CommStats",
     "Delivered",
+    "FabricResult",
+    "FlowControlConfig",
     "PulseCommConfig",
+    "PulseFabric",
+    "register_transport",
     "comm_step",
     "multi_chip_step",
 ]

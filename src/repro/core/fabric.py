@@ -1,0 +1,298 @@
+"""PulseFabric — the unified, transport-agnostic pulse-communication engine.
+
+One step implementation for the paper's whole pipeline
+
+    events → routing LUT → bucket aggregation → [credit gate]
+           → network exchange → [merge (+ rate limit)] → delay ring
+
+replaces the two hand-duplicated entry points that used to live in
+``pulse_comm`` (``comm_step`` for shard_map, ``multi_chip_step`` for a
+single device).  The per-chip body is written once against the
+:class:`repro.core.transport.Transport` protocol; the single-device "local"
+path runs the *same body* under an internal ``jax.vmap`` with a named axis,
+where ``jax.lax`` collectives batch to exactly the explicit chip-axis
+transpose the old local path performed — so local and shard_map execution
+are bitwise identical by construction (tests/test_fabric.py).
+
+Transports are resolved through a small registry::
+
+    PulseFabric(cfg, transport="local")            # single device, chip axis
+    PulseFabric(cfg, transport="shard_map")        # inside shard_map("chip")
+    PulseFabric(cfg, transport=("pod", "chip"))    # hierarchical 2-stage mesh
+    PulseFabric(cfg, transport=my_transport)       # any Transport instance
+
+New transports register via :func:`register_transport`.
+
+The NHTL-Extoll credit protocol (``repro.core.flowcontrol``, paper §2.1) is
+wired in as an optional back-pressure stage: with a
+:class:`FlowControlConfig`, credits gate how many packed buckets a chip may
+inject into the network per step.  Buckets without credits are withheld at
+the source and their events dropped *with explicit accounting* in
+``CommStats.stalled`` (the same drop-and-account model as bucket overflow;
+a retransmit queue is future work), and the consumer side returns
+``drain_rate`` credits per step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import buckets as bk
+from repro.core import delays as dl
+from repro.core import events as ev
+from repro.core import flowcontrol as fc
+from repro.core import pulse_comm as pc
+from repro.core import routing as rt
+from repro.core import transport as tp
+
+# Axis name used by the internal vmap of the local path.  Deliberately
+# obscure so it cannot collide with a user's mesh axis inside shard_map.
+LOCAL_AXIS = "_pulse_fabric_chip"
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowControlConfig:
+    """Credit-based back-pressure at the injection point (paper §2.1).
+
+    capacity   — ring-buffer slots at the consumer == max packets in flight;
+    drain_rate — packets the consumer retires (credits returned) per step.
+    """
+
+    capacity: int = 8
+    drain_rate: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportBinding:
+    """A resolved transport: the instance plus how the fabric drives it.
+
+    ``batched`` — True when step inputs carry an explicit leading chip axis
+    and the body must run under the fabric's internal vmap (local path);
+    False when the caller already provides per-chip (shard-local) views.
+    """
+
+    transport: tp.Transport
+    batched: bool = False
+
+
+TransportFactory = Callable[[pc.PulseCommConfig], TransportBinding]
+
+_REGISTRY: dict[str, TransportFactory] = {}
+
+
+def register_transport(name: str, factory: TransportFactory) -> None:
+    """Register a named transport. ``factory(cfg) -> TransportBinding``."""
+    _REGISTRY[name] = factory
+
+
+def available_transports() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_transport(
+    "local",
+    lambda cfg: TransportBinding(
+        tp.ShardMapTransport(axis=LOCAL_AXIS, n_chips=cfg.n_chips),
+        batched=True,
+    ),
+)
+register_transport(
+    "shard_map",
+    lambda cfg: TransportBinding(
+        tp.ShardMapTransport(axis="chip", n_chips=cfg.n_chips)
+    ),
+)
+
+
+def _resolve(
+    cfg: pc.PulseCommConfig, spec: str | tuple[str, ...] | tp.Transport
+) -> TransportBinding:
+    if isinstance(spec, str):
+        try:
+            factory = _REGISTRY[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown transport {spec!r}; registered: "
+                f"{available_transports()}"
+            ) from None
+        return factory(cfg)
+    if isinstance(spec, tuple) and all(isinstance(a, str) for a in spec):
+        # Tuple of mesh-axis names: hierarchical shard_map exchange
+        # (innermost axis first — pod-local links, then cross-pod).
+        return TransportBinding(
+            tp.ShardMapTransport(axis=spec, n_chips=cfg.n_chips)
+        )
+    if hasattr(spec, "all_to_all"):
+        return TransportBinding(spec)
+    raise TypeError(f"cannot resolve transport from {spec!r}")
+
+
+class FabricResult(NamedTuple):
+    """What one fabric step returns (flow is None when flow control is off)."""
+
+    ring: dl.DelayRing
+    delivered: pc.Delivered
+    stats: pc.CommStats
+    flow: fc.RingState | None
+
+
+class PulseFabric:
+    """The engine: one transport-agnostic pulse-communication step.
+
+    ``step(events, table, ring[, flow])`` runs the full pipeline.  With
+    ``transport="local"`` all arguments carry a leading chip axis and the
+    cross-chip exchange happens inside an internal vmap; with a shard_map /
+    instance transport the arguments are shard-local per-chip views and the
+    exchange is a real collective.  Semantics (both modes, stats, merge
+    rate-limiting, flow control) are defined exactly once, in
+    :meth:`_chip_step`.
+    """
+
+    def __init__(
+        self,
+        cfg: pc.PulseCommConfig,
+        transport: str | tuple[str, ...] | tp.Transport = "local",
+        *,
+        flow: FlowControlConfig | None = None,
+    ):
+        self.cfg = cfg
+        self.flow = flow
+        self._binding = _resolve(cfg, transport)
+
+    @property
+    def transport(self) -> tp.Transport:
+        return self._binding.transport
+
+    @property
+    def batched(self) -> bool:
+        return self._binding.batched
+
+    # -- flow control -------------------------------------------------------
+
+    def init_flow(self) -> fc.RingState | None:
+        """Fresh credit state (per chip; batched over chips on the local
+        path).  None when flow control is disabled."""
+        if self.flow is None:
+            return None
+        state = fc.init(self.flow.capacity)
+        if self.batched:
+            state = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.cfg.n_chips,) + x.shape),
+                state,
+            )
+        return state
+
+    def _gate(
+        self, flow: fc.RingState, packed: bk.PackedBuckets
+    ) -> tuple[fc.RingState, bk.PackedBuckets, jax.Array]:
+        """Credit gate: inject only as many non-empty buckets as credits
+        allow (lowest bucket index first).  Withheld buckets are dropped at
+        the source and counted in ``stalled`` — accounted loss, not a
+        retransmit queue (events are NOT re-offered next step)."""
+        ready = packed.counts > 0
+        n_ready = jnp.sum(ready.astype(jnp.int32))
+        flow, accepted = fc.produce(flow, n_ready)
+        rank = jnp.cumsum(ready.astype(jnp.int32)) - ready.astype(jnp.int32)
+        inject = ready & (rank < accepted)
+        stalled = jnp.sum(packed.valid & ~inject[:, None]).astype(jnp.int32)
+        packed = packed._replace(
+            valid=packed.valid & inject[:, None],
+            counts=jnp.where(inject, packed.counts, 0),
+        )
+        # Consumer retires up to drain_rate packets -> credits come back
+        # next step (notification conservation is property-tested in
+        # tests/test_flowcontrol.py).
+        flow, _ = fc.consume(flow, self.flow.drain_rate)
+        return flow, packed, stalled
+
+    # -- the single step body ----------------------------------------------
+
+    def _chip_step(
+        self,
+        events: ev.EventBuffer,
+        table: rt.RoutingTable,
+        ring: dl.DelayRing,
+        flow: fc.RingState | None,
+    ) -> tuple[dl.DelayRing, pc.Delivered, pc.CommStats, fc.RingState | None]:
+        cfg = self.cfg
+        routed = rt.route(events, table)
+        packed, traffic = pc.aggregate(cfg, routed)
+
+        stalled = jnp.int32(0)
+        if self.flow is not None:
+            flow, packed, stalled = self._gate(flow, packed)
+
+        delivered = pc.exchange(cfg, self.transport, packed)
+
+        merge_dropped = jnp.int32(0)
+        if cfg.mode == "full":
+            delivered = pc.merge_delivered(cfg, delivered)
+            if cfg.merge_rate > 0:
+                # Rate-limited merge: only the first `merge_rate` events of
+                # the sorted stream are delivered this step; the remainder
+                # models the queue (bounded by merge_depth, surplus dropped).
+                lane = jnp.arange(cfg.lanes_in)
+                in_rate = delivered.valid & (lane < cfg.merge_rate)
+                queued = delivered.valid & (lane >= cfg.merge_rate)
+                n_queued = jnp.sum(queued.astype(jnp.int32))
+                merge_dropped = jnp.maximum(n_queued - cfg.merge_depth, 0)
+                delivered = pc.Delivered(
+                    addr=delivered.addr,
+                    deadline=delivered.deadline,
+                    valid=in_rate,
+                )
+
+        new_ring, expired = dl.deposit(
+            ring, delivered.addr, delivered.deadline, delivered.valid
+        )
+        sent = jnp.sum(routed.valid.astype(jnp.int32))
+        n_packets = jnp.sum((packed.counts > 0).astype(jnp.int32))
+        payload = jnp.sum(jnp.minimum(packed.counts, cfg.bucket_capacity))
+        wire = n_packets * pc.HEADER_BYTES + payload * pc.EVENT_BYTES
+        stats = pc.CommStats(
+            sent=sent,
+            overflow=packed.overflow,
+            merge_dropped=jnp.asarray(merge_dropped, jnp.int32),
+            expired=expired,
+            stalled=stalled,
+            utilization=packed.utilization(),
+            wire_bytes=wire.astype(jnp.int32),
+            traffic=traffic,
+        )
+        return new_ring, delivered, stats, flow
+
+    # -- public API ---------------------------------------------------------
+
+    def step(
+        self,
+        events: ev.EventBuffer,
+        table: rt.RoutingTable,
+        ring: dl.DelayRing,
+        flow: fc.RingState | None = None,
+    ) -> FabricResult:
+        """One pulse-communication step.
+
+        Local path: ``events [n_chips, E]``, ``table [n_chips, N, K]``,
+        ``ring [n_chips, D, n_inputs]``.  Shard path: the same without the
+        leading chip axis (call inside shard_map over the mesh axis).
+
+        ``flow`` threads the credit state when flow control is configured;
+        pass the previous step's ``FabricResult.flow`` (auto-initialized on
+        first use if omitted).
+        """
+        if self.flow is not None and flow is None:
+            flow = self.init_flow()
+        if self.batched:
+            ring, delivered, stats, flow = jax.vmap(
+                self._chip_step, axis_name=LOCAL_AXIS
+            )(events, table, ring, flow)
+        else:
+            ring, delivered, stats, flow = self._chip_step(
+                events, table, ring, flow
+            )
+        return FabricResult(ring=ring, delivered=delivered, stats=stats,
+                            flow=flow)

@@ -24,6 +24,7 @@ with a leading chip axis (LocalTransport; CPU tests).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -83,6 +84,7 @@ class CommStats(NamedTuple):
     overflow: jax.Array      # dropped at bucket packing (congestion)
     merge_dropped: jax.Array  # dropped at merge buffer (full mode)
     expired: jax.Array       # dropped at deposit (deadline passed/too far)
+    stalled: jax.Array       # held at the source by the credit gate
     utilization: jax.Array   # mean bucket fill fraction
     wire_bytes: jax.Array    # header + payload bytes injected
     traffic: jax.Array       # [n_chips] events by destination chip
@@ -170,47 +172,20 @@ def comm_step(
     table: rt.RoutingTable,
     ring: dl.DelayRing,
 ) -> tuple[dl.DelayRing, Delivered, CommStats]:
-    """One full pulse-communication step for one chip (shard-local view).
+    """Deprecated shim — use :class:`repro.core.fabric.PulseFabric`.
 
-    Under shard_map every chip executes this simultaneously; with
-    LocalTransport, vmap it over the leading chip axis (see
-    :func:`multi_chip_step`).
+    One pulse-communication step for one chip (shard-local view), delegated
+    to the unified fabric body with the given transport instance.
     """
-    routed = rt.route(events, table)
-    packed, traffic = aggregate(cfg, routed)
-    delivered = exchange(cfg, transport, packed)
-    merge_dropped = jnp.int32(0)
-    if cfg.mode == "full":
-        delivered = merge_delivered(cfg, delivered)
-        if cfg.merge_rate > 0:
-            # Rate-limited merge: only the first `merge_rate` events of the
-            # sorted stream are delivered this step; the remainder models the
-            # queue (bounded by merge_depth, surplus dropped).
-            lane = jnp.arange(cfg.lanes_in)
-            in_rate = delivered.valid & (lane < cfg.merge_rate)
-            queued = delivered.valid & (lane >= cfg.merge_rate)
-            n_queued = jnp.sum(queued.astype(jnp.int32))
-            merge_dropped = jnp.maximum(n_queued - cfg.merge_depth, 0)
-            delivered = Delivered(
-                addr=delivered.addr, deadline=delivered.deadline, valid=in_rate
-            )
-    new_ring, expired = dl.deposit(
-        ring, delivered.addr, delivered.deadline, delivered.valid
+    from repro.core import fabric as fb
+
+    warnings.warn(
+        "pulse_comm.comm_step is deprecated; use "
+        "PulseFabric(cfg, transport=...).step(...)",
+        DeprecationWarning, stacklevel=2,
     )
-    sent = jnp.sum(routed.valid.astype(jnp.int32))
-    n_packets = jnp.sum((packed.counts > 0).astype(jnp.int32))
-    payload = jnp.sum(jnp.minimum(packed.counts, cfg.bucket_capacity))
-    wire = n_packets * HEADER_BYTES + payload * EVENT_BYTES
-    stats = CommStats(
-        sent=sent,
-        overflow=packed.overflow,
-        merge_dropped=jnp.asarray(merge_dropped, jnp.int32),
-        expired=expired,
-        utilization=packed.utilization(),
-        wire_bytes=wire.astype(jnp.int32),
-        traffic=traffic,
-    )
-    return new_ring, delivered, stats
+    res = fb.PulseFabric(cfg, transport=transport).step(events, table, ring)
+    return res.ring, res.delivered, res.stats
 
 
 def multi_chip_step(
@@ -219,44 +194,19 @@ def multi_chip_step(
     table: rt.RoutingTable,     # [n_chips, N, K] (per-chip LUTs)
     rings: dl.DelayRing,        # [n_chips, D, n_inputs]
 ) -> tuple[dl.DelayRing, Delivered, CommStats]:
-    """Single-device multi-chip step (LocalTransport semantics).
+    """Deprecated shim — use :class:`repro.core.fabric.PulseFabric`.
 
-    The exchange needs cross-chip data, so it cannot be a plain vmap: we
-    vmap route+aggregate, transpose the packed slabs (the LocalTransport
-    all_to_all), then vmap delivery.
+    Single-device multi-chip step, delegated to the fabric's "local"
+    transport (same per-chip body under an internal vmap).  Unlike the old
+    hand-written local path this reports real full-mode ``merge_dropped``
+    and applies ``merge_rate`` / ``merge_depth``.
     """
-    transport = tp.LocalTransport(n_chips=cfg.n_chips)
+    from repro.core import fabric as fb
 
-    routed = jax.vmap(rt.route)(events, table)
-    packed, traffic = jax.vmap(lambda r: aggregate(cfg, r))(routed)
-
-    shape = (cfg.n_chips, cfg.n_chips, cfg.buckets_per_chip, cfg.bucket_capacity)
-    addr = transport.all_to_all(packed.addr.reshape(shape))
-    dead = transport.all_to_all(packed.deadline.reshape(shape))
-    val = transport.all_to_all(packed.valid.reshape(shape))
-    lanes = cfg.lanes_in
-    delivered = Delivered(
-        addr=addr.reshape(cfg.n_chips, lanes),
-        deadline=dead.reshape(cfg.n_chips, lanes),
-        valid=val.reshape(cfg.n_chips, lanes),
+    warnings.warn(
+        "pulse_comm.multi_chip_step is deprecated; use "
+        'PulseFabric(cfg, transport="local").step(...)',
+        DeprecationWarning, stacklevel=2,
     )
-    if cfg.mode == "full":
-        delivered = jax.vmap(lambda d: merge_delivered(cfg, d))(delivered)
-
-    new_rings, expired = jax.vmap(
-        lambda r, d: dl.deposit(r, d.addr, d.deadline, d.valid)
-    )(rings, delivered)
-
-    sent = jax.vmap(lambda r: jnp.sum(r.valid.astype(jnp.int32)))(routed)
-    n_packets = jnp.sum((packed.counts > 0).astype(jnp.int32), axis=-1)
-    payload = jnp.sum(jnp.minimum(packed.counts, cfg.bucket_capacity), axis=-1)
-    stats = CommStats(
-        sent=sent,
-        overflow=packed.overflow,
-        merge_dropped=jnp.zeros_like(sent),
-        expired=expired,
-        utilization=jax.vmap(bk.PackedBuckets.utilization)(packed),
-        wire_bytes=(n_packets * HEADER_BYTES + payload * EVENT_BYTES).astype(jnp.int32),
-        traffic=traffic,
-    )
-    return new_rings, delivered, stats
+    res = fb.PulseFabric(cfg, transport="local").step(events, table, rings)
+    return res.ring, res.delivered, res.stats

@@ -29,6 +29,12 @@ import jax
 import jax.numpy as jnp
 
 
+def _axis_size(name: str) -> int:
+    # jax.lax.axis_size does not exist on this jax version; psum of the
+    # literal 1 over a named axis constant-folds to the static axis size.
+    return jax.lax.psum(1, name)
+
+
 class Transport(Protocol):
     n_chips: int
 
@@ -64,7 +70,7 @@ class ShardMapTransport:
                 x, axes[0], split_axis=0, concat_axis=0, tiled=True
             )
         # Hierarchical: reshape leading dim [P, Q, ...] for axes (pod, inner):
-        p = jax.lax.axis_size(axes[0])
+        p = _axis_size(axes[0])
         q = x.shape[0] // p
         y = x.reshape((p, q) + x.shape[1:])
         # Stage 1: inner-axis exchange of each pod-block (pod-local links).
@@ -86,7 +92,7 @@ class ShardMapTransport:
         axes = self._axes()
         idx = jax.lax.axis_index(axes[0])
         for a in axes[1:]:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * _axis_size(a) + jax.lax.axis_index(a)
         return idx
 
 
@@ -111,7 +117,9 @@ class LocalTransport:
         return out
 
     def psum(self, x: jax.Array) -> jax.Array:
-        return jnp.sum(x, axis=0, keepdims=True) * jnp.ones_like(x[:1])
+        # Every chip sees the full cross-chip sum — same semantics as
+        # ShardMapTransport.psum (each shard holds the reduced value).
+        return jnp.broadcast_to(jnp.sum(x, axis=0, keepdims=True), x.shape)
 
     def chip_index(self) -> jax.Array:
         return jnp.arange(self.n_chips)

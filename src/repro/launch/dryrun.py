@@ -320,7 +320,7 @@ def _stats_proto(c):
     from repro.core import pulse_comm as pc
 
     return pc.CommStats(sent=0, overflow=0, merge_dropped=0, expired=0,
-                        utilization=0, wire_bytes=0, traffic=0)
+                        stalled=0, utilization=0, wire_bytes=0, traffic=0)
 
 
 # Per-arch optimized variants discovered by the §Perf hillclimbing

@@ -1,4 +1,4 @@
-"""Multi-chip spiking network: HICANN-X chips + PulseComm interconnect.
+"""Multi-chip spiking network: HICANN-X chips + PulseFabric interconnect.
 
 Per-step protocol (time t):
 
@@ -6,24 +6,28 @@ Per-step protocol (time t):
   2. add external input           (background generators / host stimulus)
   3. crossbar matmul              → synaptic currents   [n_neurons]
   4. neuron dynamics (LIF/AdEx)   → output spikes       [n_neurons]
-  5. spikes → events → PulseComm  → deposited into destination rings
+  5. spikes → events → PulseFabric → deposited into destination rings
      (deadline = t + axonal delay >= t+1)
   6. tick
 
 Two inter-chip communication paths:
 
-* ``event`` — the paper's path: events, routing LUT, buckets, all_to_all.
-  Exact integer semantics, finite capacities, explicit loss accounting.
-  Not differentiable (addresses are discrete).
+* ``event`` — the paper's path: events, routing LUT, buckets, exchange —
+  all through :class:`repro.core.fabric.PulseFabric`.  Exact integer
+  semantics, finite capacities, explicit loss accounting.  Not
+  differentiable (addresses are discrete).
 * ``dense`` — differentiable reference: the same routing table applied as a
   scatter-add of float spike values into the destination rings (infinite
   capacity).  Used for surrogate-gradient training and as the oracle in
   equivalence tests: with no overflow/expiry the two paths deliver identical
   integer spike counts (tests/test_network.py).
 
-Both a single-device multi-chip form (leading chip axis, used by CPU tests
-and examples) and a shard_map form (chips = mesh shards, ICI collectives —
-the production path that launch/dryrun lowers) are provided.
+There is exactly ONE step body (:func:`_step_impl`), shared by the
+single-device form (:func:`step` / :func:`run` / :func:`run_plastic` —
+leading chip axis, fabric transport "local") and the shard_map production
+form (:func:`shard_step` — chips = mesh shards, real ICI collectives).
+The two differ only in the fabric binding and whether per-chip functions
+run under ``jax.vmap``.
 """
 
 from __future__ import annotations
@@ -36,6 +40,7 @@ import jax.numpy as jnp
 
 from repro.core import delays as dl
 from repro.core import events as ev
+from repro.core import fabric as fb
 from repro.core import pulse_comm as pc
 from repro.core import routing as rt
 from repro.core import transport as tp
@@ -49,6 +54,7 @@ class NetworkConfig:
     neuron_model: str = "lif"          # "lif" | "adex"
     comm_mode: str = "event"           # "event" | "dense"
     record_voltage: bool = True
+    flow: fb.FlowControlConfig | None = None   # optional credit back-pressure
 
     def __post_init__(self):
         if self.neuron_model not in ("lif", "adex"):
@@ -67,6 +73,7 @@ class NetworkState(NamedTuple):
     neuron: Any                  # LIFState/AdExState, leading chip axis
     ring: dl.DelayRing           # ring:[n_chips, D, n_inputs] now:[n_chips]
     t: jax.Array
+    flow: Any = None             # credit state when cfg.flow is configured
 
 
 class StepRecord(NamedTuple):
@@ -79,6 +86,18 @@ def _neuron_fns(cfg: NetworkConfig):
     if cfg.neuron_model == "lif":
         return nr.lif_step, nr.lif_init
     return nr.adex_step, nr.adex_init
+
+
+def local_fabric(cfg: NetworkConfig) -> fb.PulseFabric:
+    """The fabric binding used by the single-device forms."""
+    return fb.PulseFabric(cfg.comm, transport="local", flow=cfg.flow)
+
+
+def shard_fabric(cfg: NetworkConfig,
+                 axis: str | tuple[str, ...]) -> fb.PulseFabric:
+    """The fabric binding used inside shard_map over ``axis``."""
+    transport = tp.ShardMapTransport(axis=axis, n_chips=cfg.comm.n_chips)
+    return fb.PulseFabric(cfg.comm, transport=transport, flow=cfg.flow)
 
 
 def init_params(
@@ -119,7 +138,8 @@ def init_state(cfg: NetworkConfig, params: NetworkParams) -> NetworkState:
     ring = jax.vmap(
         lambda _: dl.init(c.ring_depth, c.n_inputs_per_chip, dtype=ring_dtype)
     )(jnp.arange(c.n_chips))
-    return NetworkState(neuron=nstate, ring=ring, t=jnp.asarray(0, jnp.int32))
+    return NetworkState(neuron=nstate, ring=ring, t=jnp.asarray(0, jnp.int32),
+                        flow=local_fabric(cfg).init_flow())
 
 
 # ---------------------------------------------------------------------------
@@ -149,8 +169,91 @@ def dense_route(
     return dl.DelayRing(ring=new, now=ring.now)
 
 
+def _zero_stats(c: pc.PulseCommConfig) -> pc.CommStats:
+    z = jnp.zeros((c.n_chips,), jnp.int32)
+    return pc.CommStats(
+        sent=z, overflow=z, merge_dropped=z, expired=z, stalled=z,
+        utilization=jnp.zeros((c.n_chips,), jnp.float32),
+        wire_bytes=z, traffic=jnp.zeros((c.n_chips, c.n_chips), jnp.int32),
+    )
+
+
 # ---------------------------------------------------------------------------
-# Single-device multi-chip step (leading chip axis)
+# The ONE step body
+# ---------------------------------------------------------------------------
+
+def _step_impl(
+    cfg: NetworkConfig,
+    fabric: fb.PulseFabric,
+    table: rt.RoutingTable,
+    neuron_params: Any,
+    w: jax.Array,
+    state: NetworkState,
+    ext_input: jax.Array,
+    *,
+    stdp_cfg=None,
+    stdp_state=None,
+):
+    """One network step — shared by :func:`step`, :func:`shard_step` and
+    :func:`run_plastic`.
+
+    ``fabric.batched`` decides the execution form: batched (leading chip
+    axis, per-chip functions vmapped, fabric "local") or shard-local
+    (unbatched, fabric collectives are real ICI ops).
+
+    The credit state rides in ``state.flow`` so every entry point threads
+    back-pressure across steps (auto-initialized when flow control is
+    configured but the state was built without it).
+
+    When ``stdp_cfg`` is given, the crossbar is plastic: the correlation
+    sensor sees the *delivered* input spikes (ring output + external) as the
+    pre-synaptic events — learning acts after the Extoll transport, matching
+    hardware where the sensor sits in the synapse.
+
+    Returns (new_state, record, new_w, new_stdp_state).
+    """
+    c = cfg.comm
+    nstep, _ = _neuron_fns(cfg)
+    vm = jax.vmap if fabric.batched else (lambda f: f)
+
+    ring, in_spikes = vm(dl.pop_current)(state.ring)
+    total_in = in_spikes.astype(jnp.float32) + ext_input
+    currents = vm(sy.currents)(sy.Crossbar(w=w), total_in)
+    nstate, spikes = vm(nstep)(state.neuron, currents, neuron_params)
+
+    new_stdp, new_w = stdp_state, w
+    if stdp_cfg is not None:
+        from repro.snn import stdp as stdp_mod
+
+        new_stdp, new_w = vm(
+            lambda s, pre, post, ww: stdp_mod.step(stdp_cfg, s, pre, post, ww)
+        )(stdp_state, total_in, spikes, w)
+
+    flow = state.flow
+    if fabric.flow is not None and flow is None:
+        flow = fabric.init_flow()
+    if cfg.comm_mode == "dense":
+        if not fabric.batched:
+            raise NotImplementedError(
+                "dense comm_mode needs the explicit chip axis (local fabric)")
+        ring = dense_route(c, spikes, table, ring, state.t)
+        stats = _zero_stats(c)
+    else:
+        t = state.t
+        ebs = vm(lambda s: ev.from_spikes(s > 0.5, t, c.event_capacity)[0])(
+            spikes)
+        ring, _delivered, stats, flow = fabric.step(ebs, table, ring, flow)
+
+    ring = vm(dl.tick)(ring)
+    voltage = nstate.v if cfg.record_voltage else jnp.zeros_like(nstate.v)
+    new_state = NetworkState(neuron=nstate, ring=ring, t=state.t + 1,
+                             flow=flow)
+    rec = StepRecord(spikes=spikes, voltage=voltage, stats=stats)
+    return new_state, rec, new_w, new_stdp
+
+
+# ---------------------------------------------------------------------------
+# Single-device multi-chip forms (leading chip axis)
 # ---------------------------------------------------------------------------
 
 def step(
@@ -159,36 +262,11 @@ def step(
     state: NetworkState,
     ext_input: jax.Array,         # [n_chips, n_inputs] spike counts / rates
 ) -> tuple[NetworkState, StepRecord]:
-    c = cfg.comm
-    nstep, _ = _neuron_fns(cfg)
-
-    ring, in_spikes = jax.vmap(dl.pop_current)(state.ring)
-    total_in = in_spikes.astype(jnp.float32) + ext_input
-    currents = jax.vmap(sy.currents)(params.crossbar, total_in)
-    nstate, spikes = jax.vmap(nstep)(state.neuron, currents, params.neuron)
-
-    if cfg.comm_mode == "dense":
-        ring = dense_route(c, spikes, params.table, ring, state.t)
-        stats = _zero_stats(c)
-    else:
-        ebs = jax.vmap(
-            lambda s: ev.from_spikes(s > 0.5, state.t, c.event_capacity)[0]
-        )(spikes)
-        ring, _delivered, stats = pc.multi_chip_step(c, ebs, params.table, ring)
-
-    ring = jax.vmap(dl.tick)(ring)
-    voltage = nstate.v if cfg.record_voltage else jnp.zeros_like(nstate.v)
-    new_state = NetworkState(neuron=nstate, ring=ring, t=state.t + 1)
-    return new_state, StepRecord(spikes=spikes, voltage=voltage, stats=stats)
-
-
-def _zero_stats(c: pc.PulseCommConfig) -> pc.CommStats:
-    z = jnp.zeros((c.n_chips,), jnp.int32)
-    return pc.CommStats(
-        sent=z, overflow=z, merge_dropped=z, expired=z,
-        utilization=jnp.zeros((c.n_chips,), jnp.float32),
-        wire_bytes=z, traffic=jnp.zeros((c.n_chips, c.n_chips), jnp.int32),
+    new_state, rec, _, _ = _step_impl(
+        cfg, local_fabric(cfg), params.table, params.neuron,
+        params.crossbar.w, state, ext_input,
     )
+    return new_state, rec
 
 
 def run(
@@ -198,9 +276,15 @@ def run(
     ext_inputs: jax.Array,        # [T, n_chips, n_inputs]
 ) -> tuple[NetworkState, StepRecord]:
     """Scan the network over T steps; records stacked along time."""
+    fabric = local_fabric(cfg)
+    if fabric.flow is not None and state.flow is None:
+        state = state._replace(flow=fabric.init_flow())
 
     def body(carry, ext):
-        new_state, rec = step(cfg, params, carry, ext)
+        new_state, rec, _, _ = _step_impl(
+            cfg, fabric, params.table, params.neuron, params.crossbar.w,
+            carry, ext,
+        )
         return new_state, rec
 
     return jax.lax.scan(body, state, ext_inputs)
@@ -215,12 +299,7 @@ def run_plastic(
 ):
     """On-chip learning run: crossbar weights evolve under STDP (BSS-2's
     correlation-sensor + PPU loop).  Returns (final_params, final_state,
-    record, final_stdp_state).
-
-    Plasticity sees the *delivered* input spikes (ring output + external) as
-    the pre-synaptic events — i.e. learning acts after the Extoll transport,
-    matching the hardware where the correlation sensor sits in the synapse.
-    """
+    record, final_stdp_state)."""
     from repro.snn import stdp as stdp_mod
 
     c = cfg.comm
@@ -228,32 +307,17 @@ def run_plastic(
     sstate = jax.vmap(lambda _: stdp_mod.init(c.n_inputs_per_chip,
                                               c.neurons_per_chip))(
         jnp.arange(c.n_chips))
+    fabric = local_fabric(cfg)
+    if fabric.flow is not None and state.flow is None:
+        state = state._replace(flow=fabric.init_flow())
 
     def body(carry, ext):
         net_state, w, st = carry
-        # replicate step() but with the carried (plastic) weights and
-        # visibility into the delivered input spikes
-        nstep, _ = _neuron_fns(cfg)
-        ring, in_spikes = jax.vmap(dl.pop_current)(net_state.ring)
-        total_in = in_spikes.astype(jnp.float32) + ext
-        currents = jax.vmap(sy.currents)(sy.Crossbar(w=w), total_in)
-        nstate, spikes = jax.vmap(nstep)(net_state.neuron, currents,
-                                         params.neuron)
-        st, w = jax.vmap(lambda s, pre, post, ww:
-                         stdp_mod.step(scfg, s, pre, post, ww))(
-            st, total_in, spikes, w)
-        if cfg.comm_mode == "dense":
-            ring = dense_route(c, spikes, params.table, ring, net_state.t)
-            stats = _zero_stats(c)
-        else:
-            ebs = jax.vmap(
-                lambda s: ev.from_spikes(s > 0.5, net_state.t,
-                                         c.event_capacity)[0])(spikes)
-            ring, _, stats = pc.multi_chip_step(c, ebs, params.table, ring)
-        ring = jax.vmap(dl.tick)(ring)
-        new_net = NetworkState(neuron=nstate, ring=ring, t=net_state.t + 1)
-        rec = StepRecord(spikes=spikes, voltage=nstate.v, stats=stats)
-        return (new_net, w, st), rec
+        new_state, rec, w, st = _step_impl(
+            cfg, fabric, params.table, params.neuron, w, net_state, ext,
+            stdp_cfg=scfg, stdp_state=st,
+        )
+        return (new_state, w, st), rec
 
     (final_state, w_final, s_final), rec = jax.lax.scan(
         body, (state, params.crossbar.w, sstate), ext_inputs)
@@ -274,24 +338,13 @@ def shard_step(
 ) -> tuple[NetworkState, StepRecord]:
     """Per-shard step body — call inside shard_map over ``axis``.
 
-    Identical math to :func:`step` but with real ICI collectives: the
-    all_to_all inside ``pc.comm_step`` is the Extoll exchange.
+    Identical math to :func:`step` (it IS the same body) but with real ICI
+    collectives: the all_to_all inside the fabric is the Extoll exchange.
+    Credit state (when ``cfg.flow`` is set) rides in ``state.flow`` — thread
+    the returned state back in, exactly as for :func:`step`.
     """
-    c = cfg.comm
-    nstep, _ = _neuron_fns(cfg)
-    transport = tp.ShardMapTransport(axis=axis, n_chips=c.n_chips)
-
-    ring, in_spikes = dl.pop_current(state.ring)
-    total_in = in_spikes.astype(jnp.float32) + ext_input
-    currents = sy.currents(params.crossbar, total_in)
-    nstate, spikes = nstep(state.neuron, currents, params.neuron)
-
-    ebs, _ = ev.from_spikes(spikes > 0.5, state.t, c.event_capacity)
-    ring, _delivered, stats = pc.comm_step(c, transport, ebs, params.table, ring)
-    ring = dl.tick(ring)
-
-    voltage = nstate.v if cfg.record_voltage else jnp.zeros_like(nstate.v)
-    return (
-        NetworkState(neuron=nstate, ring=ring, t=state.t + 1),
-        StepRecord(spikes=spikes, voltage=voltage, stats=stats),
+    new_state, rec, _, _ = _step_impl(
+        cfg, shard_fabric(cfg, axis), params.table, params.neuron,
+        params.crossbar.w, state, ext_input,
     )
+    return new_state, rec

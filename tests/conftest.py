@@ -1,11 +1,69 @@
 import os
+import sys
+import types
 
 # Smoke tests and kernel tests must see the real (1-device) CPU platform.
 # Only launch/dryrun sets xla_force_host_platform_device_count, in its own
 # process.  Keep compilation deterministic and quiet.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import settings
+try:
+    from hypothesis import settings
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+except ModuleNotFoundError:
+    # hypothesis is an optional (test-extra) dependency.  Without it the
+    # property-based tests auto-skip, but the rest of each module must still
+    # collect — so install a minimal stub whose @given marks tests skipped.
+    import pytest
+
+    _SKIP = pytest.mark.skip(reason="hypothesis not installed")
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            return _SKIP(fn)
+
+        return deco
+
+    class _Settings:
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*args, **kwargs):
+            pass
+
+    def _strategy_stub(*_args, **_kwargs):
+        return None
+
+    def _composite(fn):
+        # @st.composite functions are *called* at decoration time to build
+        # the strategy handed to @given — return an inert placeholder.
+        def build(*_args, **_kwargs):
+            return None
+
+        return build
+
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name in ("integers", "booleans", "lists", "tuples", "floats",
+                  "sampled_from", "just", "one_of", "text"):
+        setattr(_st, _name, _strategy_stub)
+    _st.composite = _composite
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _Settings
+    _hyp.assume = lambda *_a, **_k: True
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(all=staticmethod(lambda: []))
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -8,6 +8,12 @@ from repro.core import delays as dl
 from repro.core import events as ev
 from repro.core import pulse_comm as pc
 from repro.core import routing as rt
+from repro.core.fabric import PulseFabric
+
+
+def _local_step(cfg, ebs, tables, rings):
+    res = PulseFabric(cfg, transport="local").step(ebs, tables, rings)
+    return res.ring, res.delivered, res.stats
 
 
 def _setup(n_chips, n_neurons, capacity, mode="simplified", bpc=1, key=0,
@@ -35,7 +41,7 @@ def test_event_conservation(mode, capacity, bpc):
     """sent == overflow + expired + delivered-to-rings, in every mode and
     at every capacity (the system never silently loses or duplicates)."""
     cfg, ebs, tables, rings = _setup(4, 32, capacity, mode=mode, bpc=bpc)
-    new_rings, delivered, stats = pc.multi_chip_step(cfg, ebs, tables, rings)
+    new_rings, delivered, stats = _local_step(cfg, ebs, tables, rings)
     sent = int(stats.sent.sum())
     lost = int(stats.overflow.sum()) + int(stats.expired.sum())
     in_rings = int(new_rings.ring.sum())
@@ -45,7 +51,7 @@ def test_event_conservation(mode, capacity, bpc):
 @pytest.mark.parametrize("fanout", [1, 2, 4])
 def test_multicast_fanout(fanout):
     cfg, ebs, tables, rings = _setup(4, 16, 64, fanout=fanout, rate=0.5)
-    new_rings, _, stats = pc.multi_chip_step(cfg, ebs, tables, rings)
+    new_rings, _, stats = _local_step(cfg, ebs, tables, rings)
     n_events = int(jax.vmap(lambda e: e.count())(ebs).sum())
     assert int(stats.sent.sum()) == n_events * fanout
     assert int(new_rings.ring.sum()) == n_events * fanout  # ample capacity
@@ -55,7 +61,7 @@ def test_exact_delivery_against_reference():
     """With ample capacity, the bucket/exchange pipeline delivers exactly
     the events the routing table specifies (golden-model check)."""
     cfg, ebs, tables, rings = _setup(3, 16, 64, key=7, rate=0.5)
-    new_rings, _, _ = pc.multi_chip_step(cfg, ebs, tables, rings)
+    new_rings, _, _ = _local_step(cfg, ebs, tables, rings)
     want = np.zeros((3, cfg.ring_depth, 16), np.int64)
     for chip in range(3):
         addr = np.asarray(ebs.addr[chip])
@@ -76,7 +82,7 @@ def test_exact_delivery_against_reference():
 
 def test_full_mode_merge_orders_delivery():
     cfg, ebs, tables, rings = _setup(4, 32, 8, mode="full", bpc=2)
-    _, delivered, _ = pc.multi_chip_step(cfg, ebs, tables, rings)
+    _, delivered, _ = _local_step(cfg, ebs, tables, rings)
     d = np.asarray(delivered.deadline)
     v = np.asarray(delivered.valid)
     for chip in range(4):
@@ -86,7 +92,7 @@ def test_full_mode_merge_orders_delivery():
 
 def test_wire_bytes_accounting():
     cfg, ebs, tables, rings = _setup(2, 16, 8, rate=1.0)
-    _, _, stats = pc.multi_chip_step(cfg, ebs, tables, rings)
+    _, _, stats = _local_step(cfg, ebs, tables, rings)
     # every chip sends 16 events split across 2 destinations
     for chip in range(2):
         payload = int(stats.sent[chip]) - int(stats.overflow[chip])
@@ -119,7 +125,7 @@ def test_dynamic_bucketing_beats_static_under_skew():
             ring_depth=16, mode=mode, time_window=2,
         )
         rings = jax.vmap(lambda _: dl.init(16, n))(jnp.arange(2))
-        _, _, stats = pc.multi_chip_step(cfg, ebs, tables, rings)
+        _, _, stats = _local_step(cfg, ebs, tables, rings)
         return int(stats.overflow.sum())
 
     static_overflow = run("simplified", 1)

@@ -33,6 +33,18 @@ def test_local_put_permutes():
     np.testing.assert_array_equal(np.asarray(y)[0], np.asarray(x)[2])
 
 
+def test_local_psum_broadcasts_to_all_chips():
+    """Regression: LocalTransport.psum must hand EVERY chip the cross-chip
+    sum (ShardMapTransport semantics), not a collapsed [1, ...] row."""
+    n = 4
+    x = jnp.arange(n * 3, dtype=jnp.int32).reshape(n, 3)
+    t = tp.LocalTransport(n_chips=n)
+    y = t.psum(x)
+    assert y.shape == x.shape
+    want = np.broadcast_to(np.asarray(x).sum(axis=0, keepdims=True), x.shape)
+    np.testing.assert_array_equal(np.asarray(y), want)
+
+
 def test_exchange_matrix_counts():
     dest = jnp.asarray([0, 1, 1, 2, 0], jnp.int32)
     valid = jnp.asarray([1, 1, 0, 1, 1], dtype=bool)
@@ -119,7 +131,7 @@ _HIERARCHICAL_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax import shard_map
+    from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
     from repro.core import transport as tp
 
