@@ -7,6 +7,11 @@ Sweeps bucket capacity and measures, per step of a multi-chip network:
   * merge queue occupancy at a rate-limited destination — congestion when
     buckets are too big (the other side of the trade-off);
 and message-rate scaling with the chip count (the Extoll message-rate axis).
+
+The merge-congestion sweeps drive the *stateful* merge queue through the
+fabric (full mode, persistent MergeBuffer threaded across steps): queue
+occupancy, overflow drops, and emission latency vs. merge_rate /
+merge_depth / packet size.
 """
 
 from __future__ import annotations
@@ -90,6 +95,109 @@ def merge_congestion(capacities=(4, 8, 16, 32), rate_limit=16, seed=1):
     return rows
 
 
+def merge_fabric_sweep(merge_rates=(2, 4, 8, 16), merge_depths=(8, 32, 128),
+                       bucket_capacity=16, n_chips=4, n_neurons=128,
+                       spike_rate=0.5, steps=12, seed=4):
+    """The full stateful merge stage through the fabric: sweep the emission
+    rate and queue depth, drive a bursty load for `steps` steps, and measure
+    peak/mean queue occupancy, overflow drops, and emission latency (steps
+    an event waits in the queue before reaching the delay ring)."""
+    key = jax.random.PRNGKey(seed)
+    table = rt.random_table(key, n_neurons, n_chips, max_delay=12)
+    tables = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_chips,) + x.shape), table)
+    spikes = jax.random.uniform(key, (n_chips, n_neurons)) < spike_rate
+    ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, n_neurons)[0])(spikes)
+    zero_ebs = jax.tree.map(jnp.zeros_like, ebs)
+    rows = []
+    for mrate in merge_rates:
+        for mdepth in merge_depths:
+            cfg = pc.PulseCommConfig(
+                n_chips=n_chips, neurons_per_chip=n_neurons,
+                n_inputs_per_chip=n_neurons, event_capacity=n_neurons,
+                bucket_capacity=bucket_capacity, buckets_per_chip=4,
+                ring_depth=16, mode="full", merge_rate=mrate,
+                merge_depth=mdepth)
+            fab = PulseFabric(cfg, transport="local")
+            rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
+                jnp.arange(n_chips))
+            step = jax.jit(fab.step)
+            ring, merge = rings, fab.init_merge()
+            peak = drops = emitted_total = 0
+            occ_sum = 0
+            wait_sum = 0      # emission latency: sum over events of wait steps
+            for t in range(steps):
+                e = ebs if t < 2 else zero_ebs   # 2-step burst, then drain
+                res = step(e, tables, ring, None, merge)
+                ring, merge = res.ring, res.merge
+                occ = int(np.asarray(merge.valid).sum())
+                peak = max(peak, occ)
+                occ_sum += occ
+                drops += int(np.asarray(res.stats.merge_dropped).sum())
+                n_emit = int(np.asarray(res.delivered.valid).sum())
+                emitted_total += n_emit
+                # events emitted at step t of a burst injected at step <2
+                # waited ~t steps (t - injection step for the later burst)
+                wait_sum += n_emit * max(t - 1, 0)
+            rows.append({
+                "merge_rate": mrate,
+                "merge_depth": mdepth,
+                "bucket_capacity": bucket_capacity,
+                "peak_queue": peak,
+                "mean_queue": occ_sum / steps,
+                "merge_drops": drops,
+                "emitted": emitted_total,
+                "mean_emit_wait": wait_sum / max(emitted_total, 1),
+            })
+    return rows
+
+
+def merge_packet_size_sweep(capacities=(4, 8, 16, 32, 64), merge_rate=8,
+                            merge_depth=64, n_chips=4, n_neurons=128,
+                            spike_rate=0.5, steps=10, seed=5):
+    """The aggregation/congestion trade-off end-to-end: bigger packets
+    amortize headers but arrive in bursts that a rate-limited destination
+    must queue — occupancy and drops vs. packet (bucket) size."""
+    key = jax.random.PRNGKey(seed)
+    table = rt.random_table(key, n_neurons, n_chips, max_delay=12)
+    tables = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_chips,) + x.shape), table)
+    spikes = jax.random.uniform(key, (n_chips, n_neurons)) < spike_rate
+    ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, n_neurons)[0])(spikes)
+    zero_ebs = jax.tree.map(jnp.zeros_like, ebs)
+    rows = []
+    for cap in capacities:
+        cfg = pc.PulseCommConfig(
+            n_chips=n_chips, neurons_per_chip=n_neurons,
+            n_inputs_per_chip=n_neurons, event_capacity=n_neurons,
+            bucket_capacity=cap, buckets_per_chip=4, ring_depth=16,
+            mode="full", merge_rate=merge_rate, merge_depth=merge_depth)
+        fab = PulseFabric(cfg, transport="local")
+        rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
+            jnp.arange(n_chips))
+        step = jax.jit(fab.step)
+        ring, merge = rings, fab.init_merge()
+        peak = drops = 0
+        wire = sent = overflow = 0
+        for t in range(steps):
+            e = ebs if t < 2 else zero_ebs
+            res = step(e, tables, ring, None, merge)
+            ring, merge = res.ring, res.merge
+            peak = max(peak, int(np.asarray(merge.valid).sum()))
+            drops += int(np.asarray(res.stats.merge_dropped).sum())
+            wire += int(np.asarray(res.stats.wire_bytes).sum())
+            sent += int(np.asarray(res.stats.sent).sum())
+            overflow += int(np.asarray(res.stats.overflow).sum())
+        payload = (sent - overflow) * pc.EVENT_BYTES
+        rows.append({
+            "capacity": cap,
+            "wire_efficiency": payload / wire if wire else 0.0,
+            "peak_queue": peak,
+            "merge_drops": drops,
+        })
+    return rows
+
+
 def flow_backpressure(capacities=(1, 2, 4, 8), drain_rate=2, n_chips=4,
                       n_neurons=128, rate=0.5, steps=8, seed=3):
     """NHTL-Extoll credit gate: sweep the in-flight packet budget and
@@ -117,9 +225,10 @@ def flow_backpressure(capacities=(1, 2, 4, 8), drain_rate=2, n_chips=4,
         step = jax.jit(fab.step)
         stalled = sent = 0
         for _ in range(steps):
-            rings, _, stats, flow = step(ebs, tables, rings, flow)
-            stalled += int(stats.stalled.sum())
-            sent += int(stats.sent.sum())
+            res = step(ebs, tables, rings, flow)
+            rings, flow = res.ring, res.flow
+            stalled += int(res.stats.stalled.sum())
+            sent += int(res.stats.sent.sum())
         rows.append({"credits": cap,
                      "stall_frac": stalled / max(sent, 1)})
     return rows
@@ -170,6 +279,16 @@ def main(csv=True):
     for r in merge_congestion():
         out.append(("merge_congestion_cap_%d" % r["capacity"], 0.0,
                     f"peak_queue={r['peak_queue']};drops={r['merge_drops']}"))
+    for r in merge_fabric_sweep():
+        out.append((
+            "merge_fabric_r%d_d%d" % (r["merge_rate"], r["merge_depth"]), 0.0,
+            f"peak={r['peak_queue']};mean={r['mean_queue']:.1f};"
+            f"drops={r['merge_drops']};wait={r['mean_emit_wait']:.2f}"))
+    for r in merge_packet_size_sweep():
+        out.append((
+            "merge_packet_cap_%d" % r["capacity"], 0.0,
+            f"eff={r['wire_efficiency']:.3f};peak={r['peak_queue']};"
+            f"drops={r['merge_drops']}"))
     for r in flow_backpressure():
         out.append(("flow_backpressure_credits_%d" % r["credits"], 0.0,
                     f"stall_frac={r['stall_frac']:.3f}"))

@@ -83,6 +83,49 @@ def hop_latency(hops=(1, 2, 3, 4), delay=2, n=32, flow=None):
     return rows
 
 
+def merge_emission_latency(merge_rates=(2, 4, 8, 16, 0), n=16, delay=8,
+                           T=24):
+    """Congestion latency of the stateful merge stage: a synchronous volley
+    of n events crosses one merge-rate-limited link; the queue drains
+    merge_rate events per step, so the volley's delivery is *spread* over
+    ceil(n / merge_rate) steps instead of lost.  Reports the spread (steps
+    from first to last ring deposit) and total delivered; merge_rate=0 is
+    the uncongested baseline."""
+    rows = []
+    for mrate in merge_rates:
+        comm = pc.PulseCommConfig(
+            n_chips=2, neurons_per_chip=n, n_inputs_per_chip=n,
+            event_capacity=n, bucket_capacity=n, ring_depth=16,
+            mode="full", merge_rate=mrate, merge_depth=256)
+        cfg = net.NetworkConfig(comm=comm)
+        t0 = rt.feedforward_table(n, src_chip=0, dst_chip=1, delay=delay)
+        t1 = t0._replace(valid=jnp.zeros_like(t0.valid))
+        table = jax.tree.map(lambda *xs: jnp.stack(xs), t0, t1)
+        params = net.init_params(jax.random.PRNGKey(0), cfg, table=table)
+        w = np.zeros((2, n, n), np.float32)
+        w[0] = 1.5 * np.eye(n)
+        w[1] = 1.5 * np.eye(n)
+        params = params._replace(
+            crossbar=params.crossbar._replace(w=jnp.asarray(w)))
+        state = net.init_state(cfg, params)
+        ext = np.zeros((T, 2, n), np.float32)
+        ext[0, 0, :] = 1.0
+        emitted = []
+        for t in range(T):
+            state, rec = net.step(cfg, params, state, jnp.asarray(ext[t]))
+            occ = 0 if state.merge is None else \
+                int(np.asarray(state.merge.valid).sum())
+            emitted.append(occ)
+        drain_steps = int(np.sum(np.asarray(emitted) > 0)) + 1
+        rows.append({
+            "merge_rate": mrate,
+            "emit_spread_steps": drain_steps if mrate else 1,
+            "expected_spread": -(-n // mrate) if mrate else 1,
+            "peak_queue": max(emitted),
+        })
+    return rows
+
+
 def main(csv=True):
     out = []
     d = isi_demo()
@@ -95,6 +138,11 @@ def main(csv=True):
     for r in hop_latency(flow=ample):
         out.append((f"hop_latency_flow_{r['hops']}", 0.0,
                     f"steps={r['latency_steps']};expected={r['expected']}"))
+    for r in merge_emission_latency():
+        out.append((f"merge_emission_rate_{r['merge_rate']}", 0.0,
+                    f"spread={r['emit_spread_steps']};"
+                    f"expected={r['expected_spread']};"
+                    f"peak_queue={r['peak_queue']}"))
     if csv:
         for name, us, derived in out:
             print(f"{name},{us:.1f},{derived}")

@@ -38,8 +38,8 @@ def sweep(delays=(1, 2, 4, 8), agg_steps=(0, 1, 2, 4, 8), n=128, n_chips=4,
             rings = jax.vmap(
                 lambda _: dl.init(cfg.ring_depth, n, now=hold)
             )(jnp.arange(n_chips))
-            _, _, stats, _ = PulseFabric(cfg, transport="local").step(
-                ebs, tables, rings)
+            stats = PulseFabric(cfg, transport="local").step(
+                ebs, tables, rings).stats
             sent = int(stats.sent.sum())
             rows.append({
                 "delay_budget": d,

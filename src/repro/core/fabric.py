@@ -3,7 +3,7 @@
 One step implementation for the paper's whole pipeline
 
     events → routing LUT → bucket aggregation → [credit gate]
-           → network exchange → [merge (+ rate limit)] → delay ring
+           → network exchange → [stateful merge queue] → delay ring
 
 replaces the two hand-duplicated entry points that used to live in
 ``pulse_comm`` (``comm_step`` for shard_map, ``multi_chip_step`` for a
@@ -45,6 +45,7 @@ from repro.core import buckets as bk
 from repro.core import delays as dl
 from repro.core import events as ev
 from repro.core import flowcontrol as fc
+from repro.core import merge as mg
 from repro.core import pulse_comm as pc
 from repro.core import routing as rt
 from repro.core import transport as tp
@@ -132,12 +133,18 @@ def _resolve(
 
 
 class FabricResult(NamedTuple):
-    """What one fabric step returns (flow is None when flow control is off)."""
+    """What one fabric step returns.
+
+    ``flow`` is None when flow control is off; ``merge`` is None unless the
+    stateful merge stage is active (mode="full" with merge_rate > 0).  Both
+    are carries: thread them into the next :meth:`PulseFabric.step`.
+    """
 
     ring: dl.DelayRing
     delivered: pc.Delivered
     stats: pc.CommStats
     flow: fc.RingState | None
+    merge: mg.MergeBuffer | None = None
 
 
 class PulseFabric:
@@ -186,6 +193,27 @@ class PulseFabric:
             )
         return state
 
+    # -- temporal merge -----------------------------------------------------
+
+    @property
+    def merge_enabled(self) -> bool:
+        """True when the stateful rate-limited merge stage runs (full mode
+        with a positive merge_rate)."""
+        return self.cfg.mode == "full" and self.cfg.merge_rate > 0
+
+    def init_merge(self) -> mg.MergeBuffer | None:
+        """Fresh (empty) merge queue per chip — batched over chips on the
+        local path.  None when the merge stage is disabled."""
+        if not self.merge_enabled:
+            return None
+        buf = mg.merge_init(self.cfg.merge_depth)
+        if self.batched:
+            buf = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.cfg.n_chips,) + x.shape),
+                buf,
+            )
+        return buf
+
     def _gate(
         self, flow: fc.RingState, packed: bk.PackedBuckets
     ) -> tuple[fc.RingState, bk.PackedBuckets, jax.Array]:
@@ -217,7 +245,9 @@ class PulseFabric:
         table: rt.RoutingTable,
         ring: dl.DelayRing,
         flow: fc.RingState | None,
-    ) -> tuple[dl.DelayRing, pc.Delivered, pc.CommStats, fc.RingState | None]:
+        merge: mg.MergeBuffer | None,
+    ) -> tuple[dl.DelayRing, pc.Delivered, pc.CommStats,
+               fc.RingState | None, mg.MergeBuffer | None]:
         cfg = self.cfg
         routed = rt.route(events, table)
         packed, traffic = pc.aggregate(cfg, routed)
@@ -230,21 +260,22 @@ class PulseFabric:
 
         merge_dropped = jnp.int32(0)
         if cfg.mode == "full":
-            delivered = pc.merge_delivered(cfg, delivered)
-            if cfg.merge_rate > 0:
-                # Rate-limited merge: only the first `merge_rate` events of
-                # the sorted stream are delivered this step; the remainder
-                # models the queue (bounded by merge_depth, surplus dropped).
-                lane = jnp.arange(cfg.lanes_in)
-                in_rate = delivered.valid & (lane < cfg.merge_rate)
-                queued = delivered.valid & (lane >= cfg.merge_rate)
-                n_queued = jnp.sum(queued.astype(jnp.int32))
-                merge_dropped = jnp.maximum(n_queued - cfg.merge_depth, 0)
-                delivered = pc.Delivered(
-                    addr=delivered.addr,
-                    deadline=delivered.deadline,
-                    valid=in_rate,
+            if self.merge_enabled:
+                # Stateful rate-limited merge: the delivered stream is
+                # enqueued into the persistent per-chip queue and the
+                # merge_rate earliest-deadline events are emitted; congested
+                # events are *delayed to later steps*, not destroyed.  Only
+                # queue overflow beyond merge_depth is dropped, counted in
+                # merge_dropped, so delivered == emitted + queued + dropped
+                # holds every step by construction.
+                merge, (oa, od, ov), merge_dropped = mg.merge_step(
+                    merge, delivered.addr, delivered.deadline,
+                    delivered.valid, rate=cfg.merge_rate,
+                    use_pallas=cfg.use_pallas,
                 )
+                delivered = pc.Delivered(addr=oa, deadline=od, valid=ov)
+            else:
+                delivered = pc.merge_delivered(cfg, delivered)
 
         new_ring, expired = dl.deposit(
             ring, delivered.addr, delivered.deadline, delivered.valid
@@ -263,7 +294,7 @@ class PulseFabric:
             wire_bytes=wire.astype(jnp.int32),
             traffic=traffic,
         )
-        return new_ring, delivered, stats, flow
+        return new_ring, delivered, stats, flow, merge
 
     # -- public API ---------------------------------------------------------
 
@@ -273,6 +304,7 @@ class PulseFabric:
         table: rt.RoutingTable,
         ring: dl.DelayRing,
         flow: fc.RingState | None = None,
+        merge: mg.MergeBuffer | None = None,
     ) -> FabricResult:
         """One pulse-communication step.
 
@@ -280,19 +312,22 @@ class PulseFabric:
         ``ring [n_chips, D, n_inputs]``.  Shard path: the same without the
         leading chip axis (call inside shard_map over the mesh axis).
 
-        ``flow`` threads the credit state when flow control is configured;
-        pass the previous step's ``FabricResult.flow`` (auto-initialized on
-        first use if omitted).
+        ``flow`` threads the credit state when flow control is configured
+        and ``merge`` the persistent merge queue when the stateful merge
+        stage is active; pass the previous step's ``FabricResult.flow`` /
+        ``FabricResult.merge`` (auto-initialized on first use if omitted).
         """
         if self.flow is not None and flow is None:
             flow = self.init_flow()
+        if self.merge_enabled and merge is None:
+            merge = self.init_merge()
         if self.batched:
-            ring, delivered, stats, flow = jax.vmap(
+            ring, delivered, stats, flow, merge = jax.vmap(
                 self._chip_step, axis_name=LOCAL_AXIS
-            )(events, table, ring, flow)
+            )(events, table, ring, flow, merge)
         else:
-            ring, delivered, stats, flow = self._chip_step(
-                events, table, ring, flow
+            ring, delivered, stats, flow, merge = self._chip_step(
+                events, table, ring, flow, merge
             )
         return FabricResult(ring=ring, delivered=delivered, stats=stats,
-                            flow=flow)
+                            flow=flow, merge=merge)

@@ -70,8 +70,26 @@ def consume(state: RingState, n: jax.Array) -> tuple[RingState, jax.Array]:
     )
 
 
-def slot_indices(state: RingState, count: jax.Array, *, producer: bool) -> jax.Array:
-    """Physical ring slots for the next ``count`` writes/reads (static max
-    shape: callers pass a fixed-width iota and mask by the accepted count)."""
+def slot_indices(
+    state: RingState,
+    width: int,
+    *,
+    count: jax.Array | int | None = None,
+    producer: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """Physical ring slots for the next writes/reads, with a static shape.
+
+    ``width`` must be a Python int (the fixed maximum — shapes are static
+    under jit); ``count`` may be traced and masks how many of the leading
+    slots are actually used this step (defaults to ``width``).  Returns
+    ``(slots[width], mask[width])``.
+    """
+    if not isinstance(width, int):
+        raise TypeError(
+            f"width must be a static int, got {type(width).__name__}; pass "
+            "a traced value via count= instead"
+        )
     base = state.head if producer else state.tail
-    return (base + jnp.arange(count)) % state.capacity
+    offsets = jnp.arange(width, dtype=jnp.int32)
+    n = jnp.asarray(width if count is None else count, jnp.int32)
+    return (base + offsets) % state.capacity, offsets < n

@@ -75,6 +75,19 @@ def merge_init(depth: int) -> MergeBuffer:
     )
 
 
+def _sorted_lanes(
+    addr: jax.Array, deadline: jax.Array, valid: jax.Array, use_pallas: bool
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stable sort by (deadline-if-valid-else-INF, lane index)."""
+    if use_pallas:
+        from repro.kernels.merge_sort import ops as ms_ops
+
+        return ms_ops.merge_sort(addr, deadline, valid)
+    key = jnp.where(valid, deadline, _INF)
+    order = jnp.argsort(key, stable=True)
+    return addr[order], deadline[order], valid[order]
+
+
 def merge_step(
     buf: MergeBuffer,
     in_addr: jax.Array,
@@ -82,12 +95,22 @@ def merge_step(
     in_valid: jax.Array,
     *,
     rate: int,
+    use_pallas: bool = False,
 ) -> tuple[MergeBuffer, tuple[jax.Array, jax.Array, jax.Array], jax.Array]:
     """One merge-buffer cycle.
 
     1. enqueue incoming events (flattened packets) into the sorted queue;
-       events beyond ``depth`` are dropped (congestion overflow, returned).
-    2. emit the ``rate`` earliest-deadline events.
+    2. emit the ``rate`` earliest-deadline events;
+    3. of the remainder, keep at most ``depth`` queued — the surplus is
+       dropped (congestion overflow, returned).
+
+    Conservation holds by construction every cycle::
+
+        incoming + occupancy_before == emitted + occupancy_after + dropped
+
+    ``use_pallas`` selects the bitonic merge_sort kernel
+    (repro.kernels.merge_sort) over the jnp argsort reference; the two are
+    bit-identical (tests/test_kernels.py).
 
     Returns (new_buf, (out_addr[rate], out_deadline[rate], out_valid[rate]),
     dropped).
@@ -100,31 +123,25 @@ def merge_step(
     all_addr = jnp.concatenate([buf.addr, in_addr.reshape(-1), pad_i])
     all_dead = jnp.concatenate([buf.deadline, in_deadline.reshape(-1), pad_d])
     all_valid = jnp.concatenate([buf.valid, in_valid.reshape(-1), pad_v])
-    key = jnp.where(all_valid, all_dead, _INF)
-    order = jnp.argsort(key, stable=True)
-    all_addr = all_addr[order]
-    all_dead = all_dead[order]
-    all_valid = all_valid[order]
+    all_addr, all_dead, all_valid = _sorted_lanes(
+        all_addr, all_dead, all_valid, use_pallas
+    )
 
-    total = all_addr.shape[0]
-    lane = jnp.arange(total)
-    n_valid = jnp.sum(all_valid.astype(jnp.int32))
-
-    # Emit the first `rate` valid lanes.
+    # Valid lanes are compacted to the front, so the first `rate` lanes are
+    # the earliest-deadline events and everything the queue keeps is the
+    # window [rate, rate + depth).
     out_addr = all_addr[:rate]
     out_dead = all_dead[:rate]
     out_valid = all_valid[:rate]
 
-    # Remaining valid events shift down by `rate`; keep at most `depth`.
+    n_valid = jnp.sum(all_valid.astype(jnp.int32))
     emitted = jnp.minimum(n_valid, rate)
-    keep_valid = all_valid & (lane >= rate)
-    kept = jnp.sum(keep_valid.astype(jnp.int32))
-    dropped = jnp.maximum(kept - buf.depth, 0).astype(jnp.int32)
+    queued = n_valid - emitted
+    dropped = jnp.maximum(queued - buf.depth, 0).astype(jnp.int32)
 
     new_addr = jax.lax.dynamic_slice_in_dim(all_addr, rate, buf.depth)
     new_dead = jax.lax.dynamic_slice_in_dim(all_dead, rate, buf.depth)
     new_valid = jax.lax.dynamic_slice_in_dim(all_valid, rate, buf.depth)
-    del emitted
     return (
         MergeBuffer(addr=new_addr, deadline=new_dead, valid=new_valid),
         (out_addr, out_dead, out_valid),

@@ -175,7 +175,10 @@ def comm_step(
     """Deprecated shim — use :class:`repro.core.fabric.PulseFabric`.
 
     One pulse-communication step for one chip (shard-local view), delegated
-    to the unified fabric body with the given transport instance.
+    to the unified fabric body with the given transport instance.  The
+    3-tuple return cannot thread the stateful merge queue, so in full mode
+    with ``merge_rate > 0`` every call starts from an empty queue (events
+    held back this step are only recoverable through the fabric API).
     """
     from repro.core import fabric as fb
 
@@ -199,7 +202,9 @@ def multi_chip_step(
     Single-device multi-chip step, delegated to the fabric's "local"
     transport (same per-chip body under an internal vmap).  Unlike the old
     hand-written local path this reports real full-mode ``merge_dropped``
-    and applies ``merge_rate`` / ``merge_depth``.
+    and applies ``merge_rate`` / ``merge_depth`` — but the 3-tuple return
+    cannot thread the merge queue across calls, so each call starts from an
+    empty queue; use the fabric API to carry it.
     """
     from repro.core import fabric as fb
 

@@ -5,9 +5,11 @@ ops.py (jit'd public wrapper, interpret=True off-TPU), ref.py (pure-jnp
 oracle).  Tests sweep shapes/dtypes and assert_allclose against the oracle.
 
   bucket_pack     — the paper's event-aggregation hot path
+  merge_sort      — bitonic lane sort for the stateful merge buffer
   lif_step        — fused LIF neuron update (SNN inner loop)
   flash_attention — fused GQA attention (LM prefill/train)
   ssm_scan        — selective-SSM recurrence (Mamba archs, long context)
 """
 
-__all__ = ["bucket_pack", "lif_step", "flash_attention", "ssm_scan"]
+__all__ = ["bucket_pack", "merge_sort", "lif_step", "flash_attention",
+           "ssm_scan"]

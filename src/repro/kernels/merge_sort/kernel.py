@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: bitonic merge-sort of event lanes (merge stage).
+
+The destination merge buffer must order the concatenated (queue + incoming
+packet) lanes by deadline each cycle.  A bitonic sorting network is the
+hardware-natural realization — fixed depth log2(L)*(log2(L)+1)/2 stages of
+compare-exchange over lane pairs, each stage a handful of VPU select ops,
+no data-dependent control flow.
+
+Stability: a bitonic network is not stable on its own, so the comparator
+orders lexicographically by ``(key, original lane index)`` — a total order
+whose result is exactly the stable argsort permutation the jnp reference
+(ref.py) produces, hence bit-exact equality.
+
+Pairing trick: at substage stride ``j`` the partner of lane ``i`` is
+``i ^ j``; reshaping [L] -> [L/(2j), 2, j] puts every pair in the same
+block row, so the exchange is two static slices + a select — no gathers
+(TPU has no fast random VMEM gather).  Sort direction per 2j-block is
+constant within a block for every stage ``k >= 2j``, read off the block
+base index.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INF = 2**30
+
+
+def _compare_exchange(lanes, k: int, j: int, n: int):
+    """One bitonic substage on the lane tuple (key, idx, *payloads)."""
+    blocks = n // (2 * j)
+    key, idx = lanes[0], lanes[1]
+
+    def split(x):
+        x3 = x.reshape(blocks, 2, j)
+        return x3[:, 0, :], x3[:, 1, :]
+
+    ka, kb = split(key)
+    ia, ib = split(idx)
+    # Ascending iff bit log2(k) of the lane index is clear; constant per
+    # 2j-aligned block because k >= 2j.
+    base = jax.lax.broadcasted_iota(jnp.int32, (blocks, 1), 0) * (2 * j)
+    asc = (base & k) == 0
+    a_gt_b = (ka > kb) | ((ka == kb) & (ia > ib))
+    swap = jnp.where(asc, a_gt_b, ~a_gt_b)
+
+    def exchange(x):
+        a, b = split(x)
+        lo = jnp.where(swap, b, a)
+        hi = jnp.where(swap, a, b)
+        return jnp.stack([lo, hi], axis=1).reshape(n)
+
+    return tuple(exchange(x) for x in lanes)
+
+
+def _kernel(addr_ref, dead_ref, valid_ref, addr_out, dead_out, valid_out, *, n: int):
+    addr = addr_ref[0, :]
+    dead = dead_ref[0, :]
+    valid = valid_ref[0, :]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)[0, :]
+    key = jnp.where(valid != 0, dead, _INF)
+
+    lanes = (key, idx, addr, dead, valid)
+    k = 2
+    while k <= n:          # static network: unrolled at trace time
+        j = k // 2
+        while j >= 1:
+            lanes = _compare_exchange(lanes, k, j, n)
+            j //= 2
+        k *= 2
+
+    addr_out[0, :] = lanes[2]
+    dead_out[0, :] = lanes[3]
+    valid_out[0, :] = lanes[4]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_sort_pallas(
+    addr: jax.Array,
+    deadline: jax.Array,
+    valid: jax.Array,
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Raw kernel invocation — L must be a power of two (ops.py pads).
+
+    Returns (addr[L], deadline[L], valid_i32[L]) sorted ascending by
+    (deadline-if-valid-else-INF, original lane).
+    """
+    n = addr.shape[0]
+    if n & (n - 1):
+        raise ValueError(f"L={n} must be a power of two")
+    kernel = functools.partial(_kernel, n=n)
+    row_spec = pl.BlockSpec((1, n), lambda: (0, 0))
+    out_shapes = tuple(
+        jax.ShapeDtypeStruct((1, n), jnp.int32) for _ in range(3)
+    )
+    as_row = lambda x: x.astype(jnp.int32).reshape(1, n)
+    a, d, v = pl.pallas_call(
+        kernel,
+        in_specs=[row_spec, row_spec, row_spec],
+        out_specs=(row_spec, row_spec, row_spec),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(as_row(addr), as_row(deadline), as_row(valid))
+    return a[0], d[0], v[0]

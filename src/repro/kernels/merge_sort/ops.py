@@ -1,0 +1,53 @@
+"""jit'd public wrapper for the merge_sort kernel.
+
+Pads the lane vectors to the bitonic network size (next power of two, at
+least one 128-lane vector register), invokes the Pallas kernel
+(interpret=True off-TPU so the kernel body executes on CPU for validation),
+and slices back to the caller's lane count.  Padding lanes carry
+(key=INF, idx >= L), so the lexicographic comparator parks them strictly
+after every real lane — the leading L lanes of the sorted result are
+exactly the sorted real lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.merge_sort.kernel import merge_sort_pallas
+
+MIN_LANES = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_sort(
+    addr: jax.Array,
+    deadline: jax.Array,
+    valid: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    if interpret is None:
+        interpret = not _on_tpu()
+    l = addr.shape[0]
+    n = max(MIN_LANES, _next_pow2(l))
+    pad = n - l
+    if pad:
+        addr = jnp.pad(addr.astype(jnp.int32), (0, pad))
+        deadline = jnp.pad(deadline.astype(jnp.int32), (0, pad))
+        valid = jnp.pad(valid.astype(jnp.int32), (0, pad))
+    a, d, v = merge_sort_pallas(addr, deadline, valid, interpret=interpret)
+    return a[:l], d[:l], v[:l] != 0

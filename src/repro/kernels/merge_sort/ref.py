@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the merge_sort kernel.
+
+The merge stage's sort contract (repro.core.merge): order lanes ascending by
+``deadline`` with invalid lanes pushed to the end, stable in the original
+lane order.  The Pallas kernel must reproduce this permutation bit-exactly —
+it resolves ties by the original lane index, which for a stable sort is the
+same total order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_INF = jnp.int32(2**30)
+
+
+def merge_sort_ref(
+    addr: jax.Array, deadline: jax.Array, valid: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    key = jnp.where(valid, deadline, _INF)
+    order = jnp.argsort(key, stable=True)
+    return addr[order], deadline[order], valid[order]

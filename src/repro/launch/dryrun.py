@@ -201,23 +201,34 @@ def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     return result
 
 
-def lower_snn(n_chips: int) -> dict:
+def lower_snn(n_chips: int, mode: str = "simplified",
+              merge_rate: int = 0) -> dict:
     """Dry-run the PAPER'S OWN system at production scale: a BSS-2
     multi-chip network with chips as mesh shards, one full simulation step
     (neuron dynamics -> events -> routing LUT -> buckets -> all_to_all ->
-    delay rings) lowered + compiled per-shard under shard_map.
+    [stateful merge] -> delay rings) lowered + compiled per-shard under
+    shard_map.
 
     n_chips=46 is one wafer module; n_chips=512 is the multi-wafer tier
     (11 modules) — the Extoll-scale deployment the paper targets.
+    mode="full" with merge_rate > 0 additionally threads the persistent
+    per-chip merge queue through the shard_map step (the deferred temporal
+    merging of the complete scheme).
     """
     import dataclasses as _dc
 
     import numpy as np
-    from jax import shard_map
+    try:
+        from jax import shard_map
+        _rep_kw = {"check_vma": False}
+    except ImportError:  # older jax
+        from jax.experimental.shard_map import shard_map
+        _rep_kw = {"check_rep": False}
     from jax.sharding import Mesh, PartitionSpec as P
 
     from repro.configs.bss2 import CONFIG as BSS2
     from repro.core import delays as dl
+    from repro.core import merge as mg
     from repro.core.routing import RoutingTable
     from repro.snn import network as net
     from repro.snn import neuron as nr
@@ -227,7 +238,8 @@ def lower_snn(n_chips: int) -> dict:
     if len(devices) < n_chips:
         raise RuntimeError(f"need {n_chips} devices")
     mesh = Mesh(np.asarray(devices[:n_chips]), ("chip",))
-    comm = _dc.replace(BSS2.comm, n_chips=n_chips)
+    comm = _dc.replace(BSS2.comm, n_chips=n_chips, mode=mode,
+                       merge_rate=merge_rate)
     cfg = net.NetworkConfig(comm=comm, neuron_model=BSS2.neuron_model)
 
     c = comm
@@ -248,19 +260,29 @@ def lower_snn(n_chips: int) -> dict:
             valid=sds((n_chips, n, k), jnp.bool_),
         ),
     )
+    merge_state = None
+    if mode == "full" and merge_rate > 0:
+        merge_state = mg.MergeBuffer(
+            addr=sds((n_chips, c.merge_depth), i32),
+            deadline=sds((n_chips, c.merge_depth), i32),
+            valid=sds((n_chips, c.merge_depth), jnp.bool_),
+        )
     state = net.NetworkState(
         neuron=stacked(nr.adex_init(nparams)),
         ring=dl.DelayRing(ring=sds((n_chips, c.ring_depth, ni), i32),
                           now=sds((n_chips,), i32)),
         t=sds((), i32),
+        merge=merge_state,
     )
     ext = sds((n_chips, ni), f32)
 
     def body(params, state, ext):
         sq = lambda z: jax.tree.map(lambda a: a[0], z)
         ex = lambda z: jax.tree.map(lambda a: a[None], z)
+        opt = lambda f, z: None if z is None else f(z)
         local_state = net.NetworkState(
-            neuron=sq(state.neuron), ring=sq(state.ring), t=state.t)
+            neuron=sq(state.neuron), ring=sq(state.ring), t=state.t,
+            flow=opt(sq, state.flow), merge=opt(sq, state.merge))
         new_state, rec = net.shard_step(
             cfg, "chip",
             net.NetworkParams(crossbar=sq(params.crossbar),
@@ -269,7 +291,9 @@ def lower_snn(n_chips: int) -> dict:
         )
         return (
             net.NetworkState(neuron=ex(new_state.neuron),
-                             ring=ex(new_state.ring), t=new_state.t),
+                             ring=ex(new_state.ring), t=new_state.t,
+                             flow=opt(ex, new_state.flow),
+                             merge=opt(ex, new_state.merge)),
             ex(rec),
         )
 
@@ -284,6 +308,8 @@ def lower_snn(n_chips: int) -> dict:
         neuron=jax.tree.map(lambda _: chip, state.neuron),
         ring=dl.DelayRing(ring=chip, now=chip),
         t=rep,
+        merge=None if merge_state is None
+        else jax.tree.map(lambda _: chip, merge_state),
     )
     step = shard_map(
         body, mesh=mesh,
@@ -291,7 +317,7 @@ def lower_snn(n_chips: int) -> dict:
         out_specs=(state_specs, jax.tree.map(lambda _: chip,
                                              net.StepRecord(spikes=0, voltage=0,
                                                             stats=_stats_proto(c)))),
-        check_vma=False,
+        **_rep_kw,
     )
     t0 = time.time()
     with mesh:
@@ -299,9 +325,11 @@ def lower_snn(n_chips: int) -> dict:
         compiled = lowered.compile()
     stats = hlo_stats.analyze(compiled.as_text())
     mem = compiled.memory_analysis()
+    tag = f"{n_chips}chips" if mode == "simplified" \
+        else f"{n_chips}chips-merge{merge_rate}"
     return {
         "arch": "bss2-snn",
-        "shape": f"{n_chips}chips",
+        "shape": tag,
         "status": "ok",
         "n_devices": n_chips,
         "compile_s": round(time.time() - t0, 1),
@@ -357,9 +385,11 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.snn:
-        for n_chips in (46, 512):
-            r = lower_snn(n_chips)
-            print(f"[     ok] bss2-snn x {n_chips} chips "
+        cells = [(46, "simplified", 0), (512, "simplified", 0),
+                 (46, "full", 32)]
+        for n_chips, mode, merge_rate in cells:
+            r = lower_snn(n_chips, mode=mode, merge_rate=merge_rate)
+            print(f"[     ok] bss2-snn x {r['shape']} "
                   f"flops={r['hlo']['flops']:.3g} "
                   f"coll={r['hlo']['collective_total']:.3g}B "
                   f"compile={r['compile_s']}s", flush=True)

@@ -74,6 +74,7 @@ class NetworkState(NamedTuple):
     ring: dl.DelayRing           # ring:[n_chips, D, n_inputs] now:[n_chips]
     t: jax.Array
     flow: Any = None             # credit state when cfg.flow is configured
+    merge: Any = None            # merge queue (full mode, merge_rate > 0)
 
 
 class StepRecord(NamedTuple):
@@ -138,8 +139,9 @@ def init_state(cfg: NetworkConfig, params: NetworkParams) -> NetworkState:
     ring = jax.vmap(
         lambda _: dl.init(c.ring_depth, c.n_inputs_per_chip, dtype=ring_dtype)
     )(jnp.arange(c.n_chips))
+    fabric = local_fabric(cfg)
     return NetworkState(neuron=nstate, ring=ring, t=jnp.asarray(0, jnp.int32),
-                        flow=local_fabric(cfg).init_flow())
+                        flow=fabric.init_flow(), merge=fabric.init_merge())
 
 
 # ---------------------------------------------------------------------------
@@ -201,9 +203,10 @@ def _step_impl(
     axis, per-chip functions vmapped, fabric "local") or shard-local
     (unbatched, fabric collectives are real ICI ops).
 
-    The credit state rides in ``state.flow`` so every entry point threads
-    back-pressure across steps (auto-initialized when flow control is
-    configured but the state was built without it).
+    The credit state rides in ``state.flow`` and the persistent merge queue
+    in ``state.merge``, so every entry point threads back-pressure and
+    temporal merging across steps (auto-initialized when configured but the
+    state was built without them).
 
     When ``stdp_cfg`` is given, the crossbar is plastic: the correlation
     sensor sees the *delivered* input spikes (ring output + external) as the
@@ -232,6 +235,9 @@ def _step_impl(
     flow = state.flow
     if fabric.flow is not None and flow is None:
         flow = fabric.init_flow()
+    merge = state.merge
+    if fabric.merge_enabled and merge is None:
+        merge = fabric.init_merge()
     if cfg.comm_mode == "dense":
         if not fabric.batched:
             raise NotImplementedError(
@@ -242,12 +248,13 @@ def _step_impl(
         t = state.t
         ebs = vm(lambda s: ev.from_spikes(s > 0.5, t, c.event_capacity)[0])(
             spikes)
-        ring, _delivered, stats, flow = fabric.step(ebs, table, ring, flow)
+        res = fabric.step(ebs, table, ring, flow, merge)
+        ring, stats, flow, merge = res.ring, res.stats, res.flow, res.merge
 
     ring = vm(dl.tick)(ring)
     voltage = nstate.v if cfg.record_voltage else jnp.zeros_like(nstate.v)
     new_state = NetworkState(neuron=nstate, ring=ring, t=state.t + 1,
-                             flow=flow)
+                             flow=flow, merge=merge)
     rec = StepRecord(spikes=spikes, voltage=voltage, stats=stats)
     return new_state, rec, new_w, new_stdp
 
@@ -269,6 +276,16 @@ def step(
     return new_state, rec
 
 
+def _ensure_carries(fabric: fb.PulseFabric, state: NetworkState) -> NetworkState:
+    """Materialize flow/merge carries before a scan (the carry pytree
+    structure must be fixed across iterations)."""
+    if fabric.flow is not None and state.flow is None:
+        state = state._replace(flow=fabric.init_flow())
+    if fabric.merge_enabled and state.merge is None:
+        state = state._replace(merge=fabric.init_merge())
+    return state
+
+
 def run(
     cfg: NetworkConfig,
     params: NetworkParams,
@@ -277,8 +294,7 @@ def run(
 ) -> tuple[NetworkState, StepRecord]:
     """Scan the network over T steps; records stacked along time."""
     fabric = local_fabric(cfg)
-    if fabric.flow is not None and state.flow is None:
-        state = state._replace(flow=fabric.init_flow())
+    state = _ensure_carries(fabric, state)
 
     def body(carry, ext):
         new_state, rec, _, _ = _step_impl(
@@ -308,8 +324,7 @@ def run_plastic(
                                               c.neurons_per_chip))(
         jnp.arange(c.n_chips))
     fabric = local_fabric(cfg)
-    if fabric.flow is not None and state.flow is None:
-        state = state._replace(flow=fabric.init_flow())
+    state = _ensure_carries(fabric, state)
 
     def body(carry, ext):
         net_state, w, st = carry
@@ -340,8 +355,9 @@ def shard_step(
 
     Identical math to :func:`step` (it IS the same body) but with real ICI
     collectives: the all_to_all inside the fabric is the Extoll exchange.
-    Credit state (when ``cfg.flow`` is set) rides in ``state.flow`` — thread
-    the returned state back in, exactly as for :func:`step`.
+    Credit state (when ``cfg.flow`` is set) rides in ``state.flow`` and the
+    merge queue (full mode, merge_rate > 0) in ``state.merge`` — thread the
+    returned state back in, exactly as for :func:`step`.
     """
     new_state, rec, _, _ = _step_impl(
         cfg, shard_fabric(cfg, axis), params.table, params.neuron,

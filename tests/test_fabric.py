@@ -164,7 +164,8 @@ def test_flow_control_credits_thread_across_steps():
     fab = fb.PulseFabric(cfg, transport="local", flow=fcfg)
     flow = fab.init_flow()
     for _ in range(4):
-        rings, _, stats, flow = fab.step(ebs, tables, rings, flow)
+        res = fab.step(ebs, tables, rings, flow)
+        rings, flow = res.ring, res.flow
         in_flight = np.asarray(flow.head - flow.tail)
         assert (in_flight <= fcfg.capacity).all()
         assert (in_flight >= 0).all()
@@ -277,13 +278,15 @@ _EQUIV_SCRIPT = textwrap.dedent("""
     mesh = Mesh(np.asarray(jax.devices()).reshape(n), ("chip",))
     key = jax.random.PRNGKey(0)
 
-    for mode, bpc, flow in [("simplified", 1, None), ("full", 2, None),
-                            ("simplified", 2,
-                             fb.FlowControlConfig(capacity=2, drain_rate=1))]:
+    for mode, bpc, flow, merge_rate in [
+            ("simplified", 1, None, 0), ("full", 2, None, 0),
+            ("simplified", 2,
+             fb.FlowControlConfig(capacity=2, drain_rate=1), 0),
+            ("full", 2, None, 3)]:
         cfg = pc.PulseCommConfig(
             n_chips=n, neurons_per_chip=N, n_inputs_per_chip=N,
             event_capacity=N, bucket_capacity=4, buckets_per_chip=bpc,
-            ring_depth=16, mode=mode)
+            ring_depth=16, mode=mode, merge_rate=merge_rate, merge_depth=8)
         spikes = jax.random.uniform(key, (n, N)) < 0.6
         ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, N)[0])(spikes)
         table = rt.random_table(key, N, n, max_delay=8)
@@ -292,22 +295,27 @@ _EQUIV_SCRIPT = textwrap.dedent("""
         rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, N))(jnp.arange(n))
 
         local = fb.PulseFabric(cfg, transport="local", flow=flow)
-        ref = local.step(ebs, tables, rings, local.init_flow())
+        # two steps so the stateful merge queue actually carries over
+        ref1 = local.step(ebs, tables, rings, local.init_flow(),
+                          local.init_merge())
+        ref = local.step(ebs, tables, ref1.ring, ref1.flow, ref1.merge)
 
         shard = fb.PulseFabric(cfg, transport="shard_map", flow=flow)
         flow_b = local.init_flow()  # batched [n] state, split per shard
+        merge_b = local.init_merge()
 
-        def body(e, t, r, f):
+        def body(e, t, r, f, m):
             sq = lambda z: jax.tree.map(lambda a: a[0], z)
-            out = shard.step(sq(e), sq(t), sq(r),
-                             None if flow is None else sq(f))
+            opt = lambda z: None if z is None else sq(z)
+            out1 = shard.step(sq(e), sq(t), sq(r), opt(f), opt(m))
+            out = shard.step(sq(e), sq(t), out1.ring, out1.flow, out1.merge)
             return jax.tree.map(lambda a: a[None] if hasattr(a, "ndim")
                                 else a, out)
 
-        specs = (P("chip"), P("chip"), P("chip"), P("chip"))
+        specs = (P("chip"),) * 5
         got = shard_map(body, mesh=mesh, in_specs=specs,
                         out_specs=P("chip"), check_rep=False)(
-            ebs, tables, rings, flow_b)
+            ebs, tables, rings, flow_b, merge_b)
 
         np.testing.assert_array_equal(np.asarray(got.ring.ring),
                                       np.asarray(ref.ring.ring))
@@ -324,7 +332,15 @@ _EQUIV_SCRIPT = textwrap.dedent("""
                                           np.asarray(ref.flow.head))
             np.testing.assert_array_equal(np.asarray(got.flow.tail),
                                           np.asarray(ref.flow.tail))
-        print(f"EQUIV_OK mode={mode} bpc={bpc} flow={flow is not None}")
+        if merge_rate > 0:
+            for f in ("addr", "deadline", "valid"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(got.merge, f)),
+                    np.asarray(getattr(ref.merge, f)), err_msg="merge." + f)
+            assert int(np.asarray(ref.merge.valid).sum()) > 0, \
+                "merge case must actually queue events"
+        print(f"EQUIV_OK mode={mode} bpc={bpc} flow={flow is not None} "
+              f"merge={merge_rate}")
     print("FABRIC_EQUIVALENCE_OK")
 """)
 

@@ -1,4 +1,5 @@
 import jax.numpy as jnp
+import pytest
 from hypothesis import given, strategies as st
 
 from repro.core import flowcontrol as fc
@@ -50,5 +51,24 @@ def test_slot_indices_wrap():
     state = fc.init(4)
     state, _ = fc.produce(state, 3)
     state, _ = fc.consume(state, 3)
-    idx = fc.slot_indices(state, 3, producer=True)
+    idx, mask = fc.slot_indices(state, 3, producer=True)
     assert idx.tolist() == [3, 0, 1]
+    assert mask.tolist() == [True, True, True]
+
+
+def test_slot_indices_static_width_traced_count():
+    """The documented static-shape contract: width is static, the (traced)
+    accepted count only masks — so the call works under jit."""
+    import jax
+
+    state = fc.init(4)
+
+    @jax.jit
+    def f(s, c):
+        return fc.slot_indices(s, 3, count=c, producer=True)
+
+    idx, mask = f(state, jnp.asarray(2, jnp.int32))
+    assert idx.tolist() == [0, 1, 2]
+    assert mask.tolist() == [True, True, False]
+    with pytest.raises(TypeError, match="static int"):
+        fc.slot_indices(state, jnp.asarray(3), producer=True)

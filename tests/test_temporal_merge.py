@@ -1,0 +1,262 @@
+"""Stateful temporal merging: the full-mode merge stage must DELAY congested
+events, never destroy them.
+
+Pins the fix for the silent event loss the stateless rate-limit had: events
+in lanes [merge_rate, merge_rate + merge_depth) were invalidated every step
+while merge_dropped only counted the surplus beyond merge_depth.  With the
+persistent MergeBuffer threaded through the fabric, event conservation
+
+    delivered == emitted + still-queued + overflow-dropped
+
+holds by construction at every step, and the formerly-lost events are
+emitted on later steps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delays as dl
+from repro.core import events as ev
+from repro.core import fabric as fb
+from repro.core import pulse_comm as pc
+from repro.core import routing as rt
+from repro.snn import network as net
+
+
+def _setup(n_chips, n_neurons, *, capacity=8, bpc=2, merge_rate=4,
+           merge_depth=8, rate=0.7, key=0, flow=None, use_pallas=False):
+    k = jax.random.PRNGKey(key)
+    cfg = pc.PulseCommConfig(
+        n_chips=n_chips, neurons_per_chip=n_neurons,
+        n_inputs_per_chip=n_neurons, event_capacity=n_neurons,
+        bucket_capacity=capacity, buckets_per_chip=bpc, ring_depth=16,
+        mode="full", merge_rate=merge_rate, merge_depth=merge_depth,
+        use_pallas=use_pallas,
+    )
+    spikes = jax.random.uniform(k, (n_chips, n_neurons)) < rate
+    ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, cfg.event_capacity)[0])(
+        spikes)
+    table = rt.random_table(k, n_neurons, n_chips, max_delay=8)
+    tables = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_chips,) + x.shape),
+                          table)
+    rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
+        jnp.arange(n_chips))
+    fab = fb.PulseFabric(cfg, transport="local", flow=flow)
+    return cfg, fab, ebs, tables, rings
+
+
+# ---------------------------------------------------------------------------
+# Scan-level conservation (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("merge_rate,merge_depth,flow", [
+    (4, 8, None),
+    (2, 64, None),
+    (8, 4, None),
+    (4, 8, fb.FlowControlConfig(capacity=2, drain_rate=1)),
+])
+def test_scan_conservation_full_mode(merge_rate, merge_depth, flow):
+    """Over a multi-step jax.lax.scan, every routed event is exactly one of
+    {emitted from merge, still queued, overflow-dropped, stalled, expired} —
+    no silent loss at any (merge_rate, merge_depth, flow) setting."""
+    cfg, fab, ebs, tables, rings = _setup(
+        4, 32, merge_rate=merge_rate, merge_depth=merge_depth, flow=flow)
+    zero_ebs = jax.tree.map(jnp.zeros_like, ebs)
+    # inject for 3 steps, then 12 drain steps with no new events
+    inject = jax.tree.map(
+        lambda a, z: jnp.stack([a, a, a] + [z] * 12),
+        ebs, zero_ebs)
+
+    def body(carry, e):
+        ring, fl, mg_ = carry
+        res = fab.step(e, tables, ring, fl, mg_)
+        emitted = jnp.sum(res.delivered.valid.astype(jnp.int32))
+        return (res.ring, res.flow, res.merge), (res.stats, emitted)
+
+    (ring, _, merge), (stats, emitted) = jax.lax.scan(
+        body, (rings, fab.init_flow(), fab.init_merge()), inject)
+
+    sent = int(np.asarray(stats.sent).sum())
+    overflow = int(np.asarray(stats.overflow).sum())
+    stalled = int(np.asarray(stats.stalled).sum())
+    merge_dropped = int(np.asarray(stats.merge_dropped).sum())
+    expired = int(np.asarray(stats.expired).sum())
+    total_emitted = int(np.asarray(emitted).sum())
+    queued = int(np.asarray(merge.valid).sum())
+
+    assert sent > 0
+    assert sent == (overflow + stalled + merge_dropped + total_emitted
+                    + queued)
+    # everything emitted is in the rings or explicitly expired
+    assert total_emitted == int(np.asarray(ring.ring).sum()) + expired
+    # the per-step emission budget is respected
+    assert (np.asarray(emitted) <= merge_rate * cfg.n_chips).all()
+
+
+def test_scan_conservation_with_pallas_kernel():
+    """Same invariant through the Pallas merge_sort path, and the whole
+    multi-step trajectory is bit-identical to the jnp reference."""
+    results = {}
+    for use_pallas in (False, True):
+        cfg, fab, ebs, tables, rings = _setup(3, 24, merge_rate=3,
+                                              merge_depth=8,
+                                              use_pallas=use_pallas)
+        ring, flow, merge = rings, None, fab.init_merge()
+        zero = jax.tree.map(jnp.zeros_like, ebs)
+        traj = []
+        for step in range(8):
+            res = fab.step(ebs if step < 2 else zero, tables, ring, flow,
+                           merge)
+            ring, flow, merge = res.ring, res.flow, res.merge
+            traj.append((np.asarray(res.delivered.addr),
+                         np.asarray(res.delivered.valid),
+                         np.asarray(res.stats.merge_dropped)))
+        results[use_pallas] = (traj, np.asarray(ring.ring),
+                               np.asarray(merge.valid))
+    for (a, b) in zip(results[False][0], results[True][0]):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+    np.testing.assert_array_equal(results[False][1], results[True][1])
+    np.testing.assert_array_equal(results[False][2], results[True][2])
+
+
+# ---------------------------------------------------------------------------
+# The former silent-loss region: merge_rate <= lane < merge_rate+merge_depth
+# ---------------------------------------------------------------------------
+
+def test_silent_loss_region_events_are_delayed_not_destroyed():
+    """Events beyond merge_rate but within the queue depth used to vanish
+    with merge_dropped == 0.  Now they must all reach the delay ring on
+    later steps, with zero drops anywhere."""
+    n = 12
+    merge_rate, merge_depth = 4, 16   # 8 queued events: inside the region
+    cfg = pc.PulseCommConfig(
+        n_chips=2, neurons_per_chip=n, n_inputs_per_chip=n,
+        event_capacity=n, bucket_capacity=16, buckets_per_chip=1,
+        ring_depth=16, mode="full", merge_rate=merge_rate,
+        merge_depth=merge_depth)
+    table = rt.feedforward_table(n, src_chip=0, dst_chip=1, delay=4)
+    tables = jax.tree.map(lambda x: jnp.broadcast_to(x, (2,) + x.shape),
+                          table)
+    spikes = jnp.stack([jnp.ones((n,), bool), jnp.zeros((n,), bool)])
+    ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, n)[0])(spikes)
+    rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n))(jnp.arange(2))
+
+    fab = fb.PulseFabric(cfg, transport="local")
+    zero = jax.tree.map(jnp.zeros_like, ebs)
+    ring, merge = rings, fab.init_merge()
+    deposited = []
+    for step in range(6):
+        res = fab.step(ebs if step == 0 else zero, tables, ring, None, merge)
+        ring, merge = res.ring, res.merge
+        assert int(np.asarray(res.stats.merge_dropped).sum()) == 0
+        assert int(np.asarray(res.stats.expired).sum()) == 0
+        deposited.append(int(np.asarray(res.delivered.valid).sum()))
+
+    # step 0 emits exactly merge_rate; the formerly-lost 8 follow afterwards
+    assert deposited[0] == merge_rate
+    assert sum(deposited) == n
+    assert int(np.asarray(ring.ring).sum()) == n
+    assert int(np.asarray(merge.valid).sum()) == 0
+
+
+def test_surplus_beyond_depth_is_counted_not_silent():
+    """Only the true queue overflow is dropped, and it is accounted."""
+    n = 24
+    cfg = pc.PulseCommConfig(
+        n_chips=2, neurons_per_chip=n, n_inputs_per_chip=n,
+        event_capacity=n, bucket_capacity=32, buckets_per_chip=1,
+        ring_depth=16, mode="full", merge_rate=4, merge_depth=8)
+    table = rt.feedforward_table(n, src_chip=0, dst_chip=1, delay=4)
+    tables = jax.tree.map(lambda x: jnp.broadcast_to(x, (2,) + x.shape),
+                          table)
+    spikes = jnp.stack([jnp.ones((n,), bool), jnp.zeros((n,), bool)])
+    ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, n)[0])(spikes)
+    rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n))(jnp.arange(2))
+
+    fab = fb.PulseFabric(cfg, transport="local")
+    res = fab.step(ebs, tables, rings)
+    # 24 delivered: 4 emitted, 8 queued, 12 overflow-dropped — conservation
+    emitted = int(np.asarray(res.delivered.valid).sum())
+    queued = int(np.asarray(res.merge.valid).sum())
+    dropped = int(np.asarray(res.stats.merge_dropped).sum())
+    assert emitted == 4 and queued == 8 and dropped == 12
+    assert emitted + queued + dropped == n
+
+
+# ---------------------------------------------------------------------------
+# Network level: the merge queue rides in NetworkState across all scan paths
+# ---------------------------------------------------------------------------
+
+def _ff_merge_network(merge_rate, n=16, delay=6, T=16):
+    comm = pc.PulseCommConfig(
+        n_chips=2, neurons_per_chip=n, n_inputs_per_chip=n,
+        event_capacity=n, bucket_capacity=n, ring_depth=16,
+        mode="full", merge_rate=merge_rate, merge_depth=64)
+    cfg = net.NetworkConfig(comm=comm, neuron_model="lif")
+    t0 = rt.feedforward_table(n, src_chip=0, dst_chip=1, delay=delay)
+    t1 = t0._replace(valid=jnp.zeros_like(t0.valid))  # chip1: no echo
+    table = jax.tree.map(lambda *xs: jnp.stack(xs), t0, t1)
+    params = net.init_params(jax.random.PRNGKey(0), cfg, table=table)
+    w = np.zeros((2, n, n), np.float32)
+    w[0] = 1.5 * np.eye(n)
+    w[1] = 1.5 * np.eye(n)
+    params = params._replace(
+        crossbar=params.crossbar._replace(w=jnp.asarray(w)))
+    state = net.init_state(cfg, params)
+    ext = np.zeros((T, 2, n), np.float32)
+    ext[0, 0, :] = 1.0                   # one synchronous volley
+    return cfg, params, state, jnp.asarray(ext)
+
+
+def test_network_run_delivers_congested_volley_completely():
+    """A volley of n simultaneous events through a merge_rate-limited link:
+    the stateless code delivered only merge_rate of them; the stateful queue
+    must deliver all n (drained at merge_rate per step, delay budget ample).
+    """
+    n = 16
+    outs = {}
+    for merge_rate in (0, 4):            # 0 = unlimited (no merge stage)
+        cfg, params, state, ext = _ff_merge_network(merge_rate, n=n)
+        if merge_rate > 0:
+            assert state.merge is not None
+        final, rec = net.run(cfg, params, state, ext)
+        stats = rec.stats
+        assert int(np.asarray(stats.merge_dropped).sum()) == 0
+        assert int(np.asarray(stats.expired).sum()) == 0
+        outs[merge_rate] = int(np.asarray(rec.spikes)[:, 1].sum())
+    assert outs[4] == outs[0] == n
+
+
+def test_network_step_and_run_agree_on_merge_state():
+    """Repeated step() calls thread state.merge exactly like run()'s scan."""
+    cfg, params, state, ext = _ff_merge_network(4, T=6)
+    final_run, rec_run = net.run(cfg, params, state, ext)
+    s = state
+    spikes = []
+    for t in range(6):
+        s, rec = net.step(cfg, params, s, ext[t])
+        spikes.append(np.asarray(rec.spikes))
+    np.testing.assert_array_equal(np.stack(spikes),
+                                  np.asarray(rec_run.spikes))
+    for f in ("addr", "deadline", "valid"):
+        np.testing.assert_array_equal(np.asarray(getattr(s.merge, f)),
+                                      np.asarray(getattr(final_run.merge, f)))
+
+
+def test_merge_rate_zero_keeps_stateless_semantics():
+    """merge_rate == 0 must keep the plain time-ordered merge (no queue, no
+    state) — the configuration every pre-existing test pins."""
+    cfg, fab, ebs, tables, rings = _setup(3, 16, merge_rate=0)
+    assert not fab.merge_enabled
+    assert fab.init_merge() is None
+    res = fab.step(ebs, tables, rings)
+    assert res.merge is None
+    # delivered stream is the full merged lane set, time-ordered
+    d = np.asarray(res.delivered.deadline)
+    v = np.asarray(res.delivered.valid)
+    for chip in range(3):
+        dv = d[chip][v[chip]]
+        assert np.all(np.diff(dv) >= 0)
