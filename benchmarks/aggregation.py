@@ -22,12 +22,108 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import buckets as bk
 from repro.core import delays as dl
 from repro.core import events as ev
+from repro.core import fabric as fb
 from repro.core import merge as mg
 from repro.core import pulse_comm as pc
 from repro.core import routing as rt
+from repro.core import transport as tp
 from repro.core.fabric import FlowControlConfig, PulseFabric
+
+
+class _CountingTransport:
+    """Transport proxy that counts collective launches at trace time —
+    the per-step collective count of a jitted step is what one trace
+    records."""
+
+    def __init__(self, inner, counter: dict):
+        self.inner, self.counter = inner, counter
+        self.n_chips = inner.n_chips
+
+    def all_to_all(self, x):
+        self.counter["all_to_all"] = self.counter.get("all_to_all", 0) + 1
+        return self.inner.all_to_all(x)
+
+    def put(self, x, perm):
+        return self.inner.put(x, perm)
+
+    def psum(self, x):
+        return self.inner.psum(x)
+
+    def chip_index(self):
+        return self.inner.chip_index()
+
+
+def _counting_local_fabric(cfg, counter: dict) -> PulseFabric:
+    """A "local" fabric whose transport records collective launches."""
+    binding = fb.TransportBinding(
+        _CountingTransport(
+            tp.ShardMapTransport(axis=fb.LOCAL_AXIS, n_chips=cfg.n_chips),
+            counter),
+        batched=True,
+    )
+    return PulseFabric(cfg, transport=binding)
+
+
+def _soa_reference_step(cfg, counter: dict):
+    """The pre-word-format fabric step, frozen as the "before" baseline:
+    one-hot slot ranking, THREE payload scatters at pack, three slabs
+    across the interconnect (3 collective launches, SOA_EVENT_BYTES per
+    event), one-hot traffic matrix, SoA deposit — plus the same stats
+    reductions the fabric performs, so us/step is an apples-to-apples
+    comparison with the single-word path.  tests/test_fabric.py carries the
+    same frozen baseline as its equivalence oracle — keep the two in sync
+    if the recorded pre-refactor semantics ever need correcting."""
+    transport = _CountingTransport(tp.LocalTransport(n_chips=cfg.n_chips),
+                                   counter)
+
+    def pack_chip(r):
+        bid = bk.static_bucket_ids(r.dest_chip, n_chips=cfg.n_chips,
+                                   streams=cfg.buckets_per_chip)
+        slot, counts = bk.compute_slots(bid, r.valid, cfg.n_buckets)
+        keep = r.valid & (slot < cfg.bucket_capacity)
+        b = jnp.where(keep, bid, cfg.n_buckets)
+        s = jnp.where(keep, slot, cfg.bucket_capacity)
+        shape = (cfg.n_buckets, cfg.bucket_capacity)
+        addr = jnp.full(shape, ev.ADDR_SENTINEL, jnp.int32).at[b, s].set(
+            jnp.where(keep, r.dest_addr, ev.ADDR_SENTINEL), mode="drop")
+        dead = jnp.zeros(shape, jnp.int32).at[b, s].set(
+            jnp.where(keep, r.deadline, 0), mode="drop")
+        val = jnp.zeros(shape, bool).at[b, s].set(keep, mode="drop")
+        overflow = jnp.sum(r.valid & (slot >= cfg.bucket_capacity))
+        traffic = tp._exchange_matrix_onehot(r.dest_chip, r.valid,
+                                            cfg.n_chips)
+        return addr, dead, val, counts, overflow, traffic
+
+    def step(ebs, tables, rings):
+        routed = jax.vmap(rt.route)(ebs, tables)
+        addr, dead, val, counts, overflow, traffic = jax.vmap(pack_chip)(
+            routed)
+        shape = (cfg.n_chips, cfg.n_chips, cfg.buckets_per_chip,
+                 cfg.bucket_capacity)
+        a = transport.all_to_all(addr.reshape(shape))
+        d = transport.all_to_all(dead.reshape(shape))
+        v = transport.all_to_all(val.reshape(shape))
+        lanes = cfg.lanes_in
+        new_rings, expired = jax.vmap(dl.deposit)(
+            rings, a.reshape(cfg.n_chips, lanes),
+            d.reshape(cfg.n_chips, lanes), v.reshape(cfg.n_chips, lanes))
+        sent = jnp.sum(routed.valid.astype(jnp.int32), axis=-1)
+        n_packets = jnp.sum((counts > 0).astype(jnp.int32), axis=-1)
+        payload = jnp.sum(jnp.minimum(counts, cfg.bucket_capacity), axis=-1)
+        wire = n_packets * pc.HEADER_BYTES + payload * pc.SOA_EVENT_BYTES
+        stats = pc.CommStats(
+            sent=sent, overflow=overflow.astype(jnp.int32),
+            merge_dropped=jnp.zeros_like(sent), expired=expired,
+            stalled=jnp.zeros_like(sent),
+            utilization=jnp.minimum(counts, cfg.bucket_capacity).astype(
+                jnp.float32).mean(axis=-1) / cfg.bucket_capacity,
+            wire_bytes=wire.astype(jnp.int32), traffic=traffic)
+        return new_rings, stats
+
+    return step
 
 
 def sweep_capacity(n_chips=8, n_neurons=256, rate=0.2, capacities=(2, 4, 8, 16, 32, 64),
@@ -47,7 +143,8 @@ def sweep_capacity(n_chips=8, n_neurons=256, rate=0.2, capacities=(2, 4, 8, 16, 
         )
         rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
             jnp.arange(n_chips))
-        fab = PulseFabric(cfg, transport="local")
+        counter = {}
+        fab = _counting_local_fabric(cfg, counter)
         step = jax.jit(lambda e, t, r: fab.step(e, t, r)[:3])
         new_rings, _, stats = step(ebs, tables, rings)
         jax.block_until_ready(new_rings.ring)
@@ -56,13 +153,31 @@ def sweep_capacity(n_chips=8, n_neurons=256, rate=0.2, capacities=(2, 4, 8, 16, 
             out = step(ebs, tables, rings)
         jax.block_until_ready(out[0].ring)
         us = (time.perf_counter() - t0) / 5 * 1e6
+
+        # The pre-word-format baseline: three slabs per exchange.
+        counter_soa = {}
+        soa_step = jax.jit(_soa_reference_step(cfg, counter_soa))
+        soa_rings, soa_stats = soa_step(ebs, tables, rings)
+        jax.block_until_ready(soa_rings.ring)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            soa_rings, soa_stats = soa_step(ebs, tables, rings)
+        jax.block_until_ready(soa_rings.ring)
+        us_soa = (time.perf_counter() - t0) / 5 * 1e6
+
         sent = int(stats.sent.sum())
         of = int(stats.overflow.sum())
         payload = (sent - of) * pc.EVENT_BYTES
         wire = int(stats.wire_bytes.sum())
+        wire_soa = int(soa_stats.wire_bytes.sum())
         rows.append({
             "capacity": cap,
             "us_per_step": us,
+            "us_per_step_soa": us_soa,
+            "collectives": counter.get("all_to_all", 0),
+            "collectives_soa": counter_soa.get("all_to_all", 0),
+            "wire_bytes": wire,
+            "wire_bytes_soa": wire_soa,
             "wire_efficiency": payload / wire if wire else 0.0,
             "overflow_frac": of / max(sent, 1),
             "utilization": float(stats.utilization.mean()),
@@ -270,34 +385,51 @@ def message_rate_scaling(chip_counts=(2, 4, 8, 16), n_neurons=128, rate=0.3,
     return rows
 
 
-def main(csv=True):
+def main(csv=True, smoke=False):
+    """Returns rows of (name, us_per_call, wire_bytes, derived).
+
+    ``smoke`` shrinks every sweep to one or two tiny cells — the CI
+    benchmark smoke step uses it to keep the perf trajectory recorded
+    without burning minutes.
+    """
     out = []
-    for r in sweep_capacity():
-        out.append(("aggregation_capacity_%d" % r["capacity"],
-                    r["us_per_step"],
-                    f"eff={r['wire_efficiency']:.3f};of={r['overflow_frac']:.3f};util={r['utilization']:.3f}"))
-    for r in merge_congestion():
-        out.append(("merge_congestion_cap_%d" % r["capacity"], 0.0,
-                    f"peak_queue={r['peak_queue']};drops={r['merge_drops']}"))
-    for r in merge_fabric_sweep():
+    caps = (8, 16) if smoke else (2, 4, 8, 16, 32, 64)
+    for r in sweep_capacity(capacities=caps):
         out.append((
-            "merge_fabric_r%d_d%d" % (r["merge_rate"], r["merge_depth"]), 0.0,
+            "aggregation_capacity_%d" % r["capacity"], r["us_per_step"],
+            r["wire_bytes"],
+            f"eff={r['wire_efficiency']:.3f};of={r['overflow_frac']:.3f};"
+            f"util={r['utilization']:.3f};coll={r['collectives']};"
+            f"coll_soa={r['collectives_soa']};"
+            f"wire_soa={r['wire_bytes_soa']};"
+            f"us_soa={r['us_per_step_soa']:.1f}"))
+    for r in merge_congestion(capacities=(8,) if smoke else (4, 8, 16, 32)):
+        out.append(("merge_congestion_cap_%d" % r["capacity"], 0.0, 0,
+                    f"peak_queue={r['peak_queue']};drops={r['merge_drops']}"))
+    for r in merge_fabric_sweep(
+            merge_rates=(4,) if smoke else (2, 4, 8, 16),
+            merge_depths=(32,) if smoke else (8, 32, 128)):
+        out.append((
+            "merge_fabric_r%d_d%d" % (r["merge_rate"], r["merge_depth"]),
+            0.0, 0,
             f"peak={r['peak_queue']};mean={r['mean_queue']:.1f};"
             f"drops={r['merge_drops']};wait={r['mean_emit_wait']:.2f}"))
-    for r in merge_packet_size_sweep():
+    for r in merge_packet_size_sweep(
+            capacities=(16,) if smoke else (4, 8, 16, 32, 64)):
         out.append((
-            "merge_packet_cap_%d" % r["capacity"], 0.0,
+            "merge_packet_cap_%d" % r["capacity"], 0.0, 0,
             f"eff={r['wire_efficiency']:.3f};peak={r['peak_queue']};"
             f"drops={r['merge_drops']}"))
-    for r in flow_backpressure():
-        out.append(("flow_backpressure_credits_%d" % r["credits"], 0.0,
+    for r in flow_backpressure(capacities=(2,) if smoke else (1, 2, 4, 8)):
+        out.append(("flow_backpressure_credits_%d" % r["credits"], 0.0, 0,
                     f"stall_frac={r['stall_frac']:.3f}"))
-    for r in message_rate_scaling():
+    for r in message_rate_scaling(chip_counts=(4,) if smoke
+                                  else (2, 4, 8, 16)):
         out.append(("message_rate_%dchips" % r["n_chips"], r["us_per_step"],
-                    f"mev_s={r['mevents_per_s']:.3f}"))
+                    0, f"mev_s={r['mevents_per_s']:.3f}"))
     if csv:
-        for name, us, derived in out:
-            print(f"{name},{us:.1f},{derived}")
+        for name, us, wire, derived in out:
+            print(f"{name},{us:.1f},{wire},{derived}")
     return out
 
 

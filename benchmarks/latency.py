@@ -41,6 +41,7 @@ def isi_demo(n=64, delay=2, T=64):
         "isi_source": float(np.diff(src_t).mean()),
         "isi_target": float(np.diff(dst_t).mean()),
         "first_spike_latency": int(dst_t[0] - src_t[0]),
+        "wire_bytes": int(np.asarray(rec.stats.wire_bytes).sum()),
         "voltage_trace_target": np.asarray(rec.voltage[:, 1, 0]),
     }
 
@@ -79,7 +80,8 @@ def hop_latency(hops=(1, 2, 3, 4), delay=2, n=32, flow=None):
         t_first = np.nonzero(s[:, -1, 0])[0]
         rows.append({"hops": n_hops,
                      "latency_steps": int(t_first[0]) if len(t_first) else -1,
-                     "expected": delay * n_hops})
+                     "expected": delay * n_hops,
+                     "wire_bytes": int(np.asarray(rec.stats.wire_bytes).sum())})
     return rows
 
 
@@ -126,26 +128,29 @@ def merge_emission_latency(merge_rates=(2, 4, 8, 16, 0), n=16, delay=8,
     return rows
 
 
-def main(csv=True):
+def main(csv=True, smoke=False):
+    """Returns rows of (name, us_per_call, wire_bytes, derived)."""
     out = []
     d = isi_demo()
-    out.append(("isi_demo", 0.0,
+    out.append(("isi_demo", 0.0, d["wire_bytes"],
                 f"isi_src={d['isi_source']:.1f};isi_dst={d['isi_target']:.1f};latency={d['first_spike_latency']}"))
-    for r in hop_latency():
-        out.append((f"hop_latency_{r['hops']}", 0.0,
+    hops = (1, 2) if smoke else (1, 2, 3, 4)
+    for r in hop_latency(hops=hops):
+        out.append((f"hop_latency_{r['hops']}", 0.0, r["wire_bytes"],
                     f"steps={r['latency_steps']};expected={r['expected']}"))
     ample = FlowControlConfig(capacity=16, drain_rate=16)
-    for r in hop_latency(flow=ample):
-        out.append((f"hop_latency_flow_{r['hops']}", 0.0,
+    for r in hop_latency(hops=hops, flow=ample):
+        out.append((f"hop_latency_flow_{r['hops']}", 0.0, r["wire_bytes"],
                     f"steps={r['latency_steps']};expected={r['expected']}"))
-    for r in merge_emission_latency():
-        out.append((f"merge_emission_rate_{r['merge_rate']}", 0.0,
+    for r in merge_emission_latency(merge_rates=(4, 0) if smoke
+                                    else (2, 4, 8, 16, 0)):
+        out.append((f"merge_emission_rate_{r['merge_rate']}", 0.0, 0,
                     f"spread={r['emit_spread_steps']};"
                     f"expected={r['expected_spread']};"
                     f"peak_queue={r['peak_queue']}"))
     if csv:
-        for name, us, derived in out:
-            print(f"{name},{us:.1f},{derived}")
+        for name, us, wire, derived in out:
+            print(f"{name},{us:.1f},{wire},{derived}")
     return out
 
 

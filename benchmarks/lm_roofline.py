@@ -32,7 +32,9 @@ def table(path="experiments/dryrun_baseline.jsonl", multi_pod=False):
     return out
 
 
-def main(csv=True):
+def main(csv=True, smoke=False):
+    """Returns rows of (name, us_per_call, wire_bytes, derived)."""
+    del smoke  # table() only reads existing dry-run records
     out = []
     for row in table():
         name = f"roofline_{row['arch']}_{row['shape']}"
@@ -40,12 +42,12 @@ def main(csv=True):
                    f"coll={row['collective_s']:.3f};dom={row['dominant']};"
                    f"useful={row['useful_ratio']:.3f};"
                    f"roofline={row['roofline_frac']*100:.2f}%")
-        out.append((name, 0.0, derived))
+        out.append((name, 0.0, 0, derived))
     if csv:
-        for name, us, derived in out:
-            print(f"{name},{us:.1f},{derived}")
+        for name, us, wire, derived in out:
+            print(f"{name},{us:.1f},{wire},{derived}")
         if not out:
-            print("lm_roofline_missing,0.0,run-dryrun-first")
+            print("lm_roofline_missing,0.0,0,run-dryrun-first")
     return out
 
 

@@ -49,14 +49,16 @@ def sweep(delays=(1, 2, 4, 8), agg_steps=(0, 1, 2, 4, 8), n=128, n_chips=4,
     return rows
 
 
-def main(csv=True):
+def main(csv=True, smoke=False):
+    """Returns rows of (name, us_per_call, wire_bytes, derived)."""
     out = []
-    for r in sweep():
-        out.append((f"loss_d{r['delay_budget']}_hold{r['agg_hold']}", 0.0,
+    rows = (sweep(delays=(2, 8), agg_steps=(0, 4)) if smoke else sweep())
+    for r in rows:
+        out.append((f"loss_d{r['delay_budget']}_hold{r['agg_hold']}", 0.0, 0,
                     f"loss={r['loss_frac']:.3f}"))
     if csv:
-        for name, us, derived in out:
-            print(f"{name},{us:.1f},{derived}")
+        for name, us, wire, derived in out:
+            print(f"{name},{us:.1f},{wire},{derived}")
     return out
 
 

@@ -2,25 +2,49 @@
 
   aggregation  — throughput / wire-efficiency / overflow vs bucket capacity,
                  merge congestion, message-rate scaling (paper §3.1 + the
-                 Extoll bandwidth/message-rate axes)
+                 Extoll bandwidth/message-rate axes), with before/after
+                 comparison against the pre-word-format three-array exchange
   latency      — ISI-doubling demo timing + per-hop latency (paper §4)
   loss_budget  — event loss vs axonal-delay budget (paper §3.1 expiry)
   lm_roofline  — per-(arch x shape) roofline terms from the dry-run
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,wire_bytes,derived`` CSV; ``--json PATH``
+additionally writes the same rows as machine-readable JSON
+(``[{name, us_per_call, wire_bytes, derived}, ...]``) so the perf
+trajectory is tracked across PRs (CI uploads ``BENCH_fabric.json``).
+``--smoke`` shrinks every sweep to a tiny cell for the CI smoke step.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="also write rows as JSON (e.g. BENCH_fabric.json)")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sweeps only (CI benchmark smoke)")
+    args = p.parse_args(argv)
+
     from benchmarks import aggregation, latency, lm_roofline, loss_budget
 
-    print("name,us_per_call,derived")
-    aggregation.main()
-    latency.main()
-    loss_budget.main()
-    lm_roofline.main()
+    print("name,us_per_call,wire_bytes,derived")
+    rows = []
+    for mod in (aggregation, latency, loss_budget, lm_roofline):
+        rows.extend(mod.main(csv=True, smoke=args.smoke))
+
+    if args.json:
+        payload = [
+            {"name": name, "us_per_call": us, "wire_bytes": wire,
+             "derived": derived}
+            for name, us, wire, derived in rows
+        ]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -6,12 +6,14 @@ before being handed to the interconnect.  The number of events to accumulate
 the destination merge and against timestamp expiry (aggregation time is
 bounded by the modeled axonal delay).
 
-On TPU a "packet" is a fixed-shape ``[n_buckets, capacity]`` slab per lane
-(addr / deadline / validity).  Packing is a scatter-with-rank-within-group:
-event *i* with bucket *b* lands at ``out[b, rank_i]`` where ``rank_i`` is the
-number of earlier valid events with the same bucket.  Events whose rank
-exceeds ``capacity`` overflow (congestion drop — explicitly accounted, the
-analogue of back-pressure on the real system).
+On TPU a "packet" is a fixed-shape ``words: int32[n_buckets, capacity]``
+slab of packed wire words (14-bit address | 8-bit wrap timestamp, see
+``repro.core.events``) — the paper's §2 on-wire format, one int32 lane per
+event instead of three SoA arrays.  Packing is a scatter-with-rank-within-
+group: event *i* with bucket *b* lands at ``out[b, rank_i]`` where ``rank_i``
+is the number of earlier valid events with the same bucket.  Events whose
+rank exceeds ``capacity`` overflow (congestion drop — explicitly accounted,
+the analogue of back-pressure on the real system).
 
 This module holds the pure-jnp implementation (also the Pallas oracle — see
 ``repro.kernels.bucket_pack``) plus the two bucket-assignment policies:
@@ -34,29 +36,53 @@ import jax.numpy as jnp
 
 from repro.core import events as ev
 
+# Above this much one-hot work (E events x n_buckets columns) the
+# sort-based ranking wins: compute_slots materializes an [E, n_buckets]
+# compare+cumsum (O(E*n_buckets) elements through the VPU) while
+# compute_slots_sorted is a single O(E log E) stable argsort plus two
+# gathers.  2**16 keeps the small paper-scale configs (E<=512, a few dozen
+# buckets) on the cheap-to-fuse one-hot path and routes MoE-scale dispatch
+# (E in the millions) through the sort.  Results are identical either way
+# (property-pinned in tests/test_buckets.py).
+SORTED_SLOTS_MIN_WORK = 1 << 16
+
 
 class PackedBuckets(NamedTuple):
-    """Packed payload slabs plus accounting.
+    """Packed wire-word slab plus accounting.
 
-    addr / deadline : int32[n_buckets, capacity]
-    valid           : bool [n_buckets, capacity]
-    counts          : int32[n_buckets]   (pre-overflow fill level)
-    overflow        : int32[]            (total dropped events)
+    words    : int32[n_buckets, capacity]  packed events (WORD_SENTINEL = empty)
+    counts   : int32[n_buckets]            pre-overflow fill level
+    overflow : int32[]                     total dropped events
+
+    The SoA views (``addr`` / ``deadline`` / ``valid``) are decoded on
+    demand for stats and tests; only ``words`` travels on the interconnect.
+    ``deadline`` is the 8-bit on-wire timestamp — reconstruct full-width
+    deadlines with :func:`repro.core.events.word_deadline` where needed.
     """
 
-    addr: jax.Array
-    deadline: jax.Array
-    valid: jax.Array
+    words: jax.Array
     counts: jax.Array
     overflow: jax.Array
 
     @property
     def n_buckets(self) -> int:
-        return self.addr.shape[0]
+        return self.words.shape[0]
 
     @property
     def capacity(self) -> int:
-        return self.addr.shape[1]
+        return self.words.shape[1]
+
+    @property
+    def addr(self) -> jax.Array:
+        return ev.word_addr(self.words)
+
+    @property
+    def deadline(self) -> jax.Array:
+        return ev.word_time(self.words)
+
+    @property
+    def valid(self) -> jax.Array:
+        return ev.word_valid(self.words)
 
     def utilization(self) -> jax.Array:
         """Mean fill fraction — the packet-efficiency metric (1 - header
@@ -69,7 +95,8 @@ def compute_slots(bucket_id: jax.Array, valid: jax.Array, n_buckets: int):
     """Rank of each event within its bucket (exclusive running count).
 
     Returns (slot[E], counts[n_buckets]).  O(E * n_buckets) one-hot cumsum —
-    fine for the reference path; the Pallas kernel does tiled prefix sums.
+    fine for small streams; :func:`pack` switches to the sort-based ranking
+    above ``SORTED_SLOTS_MIN_WORK``.
     """
     e = bucket_id.shape[0]
     onehot = (
@@ -87,7 +114,8 @@ def compute_slots_sorted(bucket_id: jax.Array, valid: jax.Array, n_buckets: int)
     """Rank within bucket via stable sort — O(E log E) instead of the
     one-hot O(E·n_buckets) of :func:`compute_slots`.  Used when the event
     stream is large and buckets are many (MoE token dispatch: E = millions
-    of tokens, n_buckets = experts).  Identical results (property-tested).
+    of tokens, n_buckets = experts).  Identical results on valid lanes and
+    identical counts (property-tested).
     """
     e = bucket_id.shape[0]
     key = jnp.where(valid, bucket_id, n_buckets)
@@ -100,6 +128,17 @@ def compute_slots_sorted(bucket_id: jax.Array, valid: jax.Array, n_buckets: int)
     return slot, counts[:n_buckets]
 
 
+def _slots(bucket_id, valid, n_buckets: int, slots: str | None):
+    if slots is None:
+        e = bucket_id.shape[0]
+        slots = "sorted" if e * n_buckets > SORTED_SLOTS_MIN_WORK else "onehot"
+    if slots == "sorted":
+        return compute_slots_sorted(bucket_id, valid, n_buckets)
+    if slots == "onehot":
+        return compute_slots(bucket_id, valid, n_buckets)
+    raise ValueError(f"unknown slots impl {slots!r}")
+
+
 def pack(
     bucket_id: jax.Array,
     addr: jax.Array,
@@ -108,39 +147,35 @@ def pack(
     *,
     n_buckets: int,
     capacity: int,
+    slots: str | None = None,
 ) -> PackedBuckets:
     """Pure-jnp bucket packing (reference path / Pallas oracle).
 
-    Stable: events keep their arrival order within a bucket, as the hardware
-    bucket-buffer (a FIFO) does.
+    Encodes each event into its wire word and scatters the single word slab
+    — one scatter instead of three.  Stable: events keep their arrival order
+    within a bucket, as the hardware bucket-buffer (a FIFO) does.
+
+    ``slots`` forces the ranking implementation ("onehot" | "sorted"); by
+    default the sort-based path is selected when the one-hot work
+    ``E * n_buckets`` exceeds ``SORTED_SLOTS_MIN_WORK``.
     """
-    slot, counts = compute_slots(bucket_id, valid, n_buckets)
+    slot, counts = _slots(bucket_id, valid, n_buckets, slots)
     keep = valid & (slot < capacity)
+    words_in = ev.encode_word(addr, deadline, keep)
     # Send dropped lanes out of bounds: with mode="drop" they vanish instead
     # of clobbering slot (0, 0).
     b = jnp.where(keep, bucket_id, n_buckets)
     s = jnp.where(keep, slot, capacity)
-    out_addr = jnp.full((n_buckets, capacity), ev.ADDR_SENTINEL, jnp.int32)
-    out_dead = jnp.zeros((n_buckets, capacity), jnp.int32)
-    out_valid = jnp.zeros((n_buckets, capacity), bool)
-    out_addr = out_addr.at[b, s].set(jnp.where(keep, addr, ev.ADDR_SENTINEL),
-                                     mode="drop")
-    out_dead = out_dead.at[b, s].set(jnp.where(keep, deadline, 0), mode="drop")
-    out_valid = out_valid.at[b, s].set(keep, mode="drop")
+    out_words = jnp.full((n_buckets, capacity), ev.WORD_SENTINEL, jnp.int32)
+    out_words = out_words.at[b, s].set(words_in, mode="drop")
     overflow = jnp.sum(valid & (slot >= capacity)).astype(jnp.int32)
-    return PackedBuckets(
-        addr=out_addr, deadline=out_dead, valid=out_valid,
-        counts=counts, overflow=overflow,
-    )
+    return PackedBuckets(words=out_words, counts=counts, overflow=overflow)
 
 
 def unpack(packed: PackedBuckets) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Flatten packed buckets back to event lanes [n_buckets * capacity]."""
-    return (
-        packed.addr.reshape(-1),
-        packed.deadline.reshape(-1),
-        packed.valid.reshape(-1),
-    )
+    """Flatten packed buckets back to decoded SoA event lanes
+    [n_buckets * capacity] — (addr, deadline8, valid)."""
+    return ev.decode_word(packed.words.reshape(-1))
 
 
 # ---------------------------------------------------------------------------

@@ -20,6 +20,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import events as ev
+
 
 class DelayRing(NamedTuple):
     """ring : int32[D, n_inputs] pending spike counts per future time slot.
@@ -65,6 +67,29 @@ def deposit(
     expired = jnp.sum(valid & ~deliverable).astype(jnp.int32)
     slot = jnp.where(deliverable, deadline % d, 0)
     col = jnp.where(deliverable, jnp.clip(dest_addr, 0, state.n_inputs - 1), 0)
+    ring = state.ring.at[slot, col].add(deliverable.astype(jnp.int32), mode="drop")
+    return DelayRing(ring=ring, now=state.now), expired
+
+
+def deposit_words(state: DelayRing, words: jax.Array) -> tuple[DelayRing, jax.Array]:
+    """Scatter packed wire words into their deadline slots — the single
+    decode point of the fabric hot path.  Returns (state, expired).
+
+    The 8-bit on-wire deadline is reconstructed relative to ``now`` via the
+    wraparound difference (valid under the aggregation-window contract
+    |deadline - now| < 128, which the ring-depth bound D < 128 enforced by
+    PulseCommConfig guarantees for every deliverable event).  Semantics are
+    identical to :func:`deposit` on the decoded lanes: deliverable iff
+    ``now < deadline <= now + D``; everything else is counted expired.
+    """
+    d = state.depth
+    valid = ev.word_valid(words)
+    ahead = ev.wrap8_diff(words & ev.WORD_TIME_MASK, ev.wrap8(state.now))
+    deliverable = valid & (ahead > 0) & (ahead <= d)
+    expired = jnp.sum(valid & ~deliverable).astype(jnp.int32)
+    slot = jnp.where(deliverable, (state.now + ahead) % d, 0)
+    addr = ev.word_addr(words)
+    col = jnp.where(deliverable, jnp.clip(addr, 0, state.n_inputs - 1), 0)
     ring = state.ring.at[slot, col].add(deliverable.astype(jnp.int32), mode="drop")
     return DelayRing(ring=ring, now=state.now), expired
 

@@ -25,6 +25,21 @@ ADDR_SENTINEL = -1
 TIME_BITS = 8
 TIME_MOD = 1 << TIME_BITS
 
+# --- Packed wire word (the paper's §2 on-wire event format) ----------------
+#
+# One pulse event leaves the chip as a single word: 14-bit source/destination
+# neuron address in bits [8, 22) and the 8-bit wraparound timestamp in bits
+# [0, 8).  Bits [22, 32) are reserved and zero for every valid word, so the
+# all-ones pattern (int32 -1) can never collide with a real event and serves
+# as the reserved validity encoding: ``word >= 0``  <=>  lane carries an
+# event.  The whole fabric hot path (pack -> all_to_all -> merge -> deposit)
+# moves this one int32 slab instead of three SoA arrays.
+WORD_TIME_BITS = TIME_BITS
+WORD_ADDR_SHIFT = TIME_BITS
+WORD_TIME_MASK = TIME_MOD - 1
+WORD_ADDR_MASK = (1 << ADDR_BITS) - 1
+WORD_SENTINEL = -1  # all-ones int32: the reserved "no event" encoding
+
 
 class EventBuffer(NamedTuple):
     """A fixed-capacity buffer of pulse events (structure of arrays).
@@ -115,6 +130,70 @@ def wrap8_diff(a: jax.Array, b: jax.Array) -> jax.Array:
     """
     d = (jnp.asarray(a, jnp.int32) - jnp.asarray(b, jnp.int32)) & (TIME_MOD - 1)
     return jnp.where(d >= TIME_MOD // 2, d - TIME_MOD, d)
+
+
+def encode_word(addr: jax.Array, time: jax.Array, valid: jax.Array) -> jax.Array:
+    """Pack (addr, time, valid) into the single on-wire word.
+
+    addr is masked to 14 bits (PulseCommConfig guarantees neuron addresses
+    fit) and time is projected through :func:`wrap8`; invalid lanes become
+    ``WORD_SENTINEL``.
+    """
+    a = jnp.asarray(addr, jnp.int32) & WORD_ADDR_MASK
+    w = (a << WORD_ADDR_SHIFT) | wrap8(time)
+    return jnp.where(jnp.asarray(valid, bool), w, jnp.int32(WORD_SENTINEL))
+
+
+def word_valid(word: jax.Array) -> jax.Array:
+    """Validity of a wire word: every real word has its reserved high bits
+    zero, so sign alone separates events from the all-ones sentinel."""
+    return jnp.asarray(word, jnp.int32) >= 0
+
+
+def word_addr(word: jax.Array) -> jax.Array:
+    """14-bit address field; ``ADDR_SENTINEL`` for invalid lanes."""
+    w = jnp.asarray(word, jnp.int32)
+    return jnp.where(w >= 0, w >> WORD_ADDR_SHIFT, jnp.int32(ADDR_SENTINEL))
+
+
+def word_time(word: jax.Array) -> jax.Array:
+    """8-bit wraparound timestamp field; 0 for invalid lanes."""
+    w = jnp.asarray(word, jnp.int32)
+    return jnp.where(w >= 0, w & WORD_TIME_MASK, 0)
+
+
+def decode_word(word: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Unpack a wire word into (addr, time8, valid).
+
+    Invalid lanes decode to (ADDR_SENTINEL, 0, False), the same encoding the
+    SoA event buffers use for empty lanes.
+    """
+    return word_addr(word), word_time(word), word_valid(word)
+
+
+def word_sort_key(word: jax.Array, now: jax.Array) -> jax.Array:
+    """Wrap-aware merge key, derivable from the word without a full decode.
+
+    The 8-bit deadline lives in the low bits; biasing its wraparound
+    difference to ``now`` into [0, 256) gives a key that is monotone in the
+    true (full-width) deadline whenever |deadline - now| < 128 — exactly the
+    paper's aggregation-window contract.  Invalid lanes map above every real
+    key so a plain ascending sort parks them last.
+    """
+    w = jnp.asarray(word, jnp.int32)
+    rel = (w - jnp.asarray(now, jnp.int32) + TIME_MOD // 2) & WORD_TIME_MASK
+    return jnp.where(w >= 0, rel, jnp.int32(TIME_MOD))
+
+
+def word_deadline(word: jax.Array, now: jax.Array) -> jax.Array:
+    """Reconstruct the full-width deadline of a word relative to ``now``.
+
+    Valid under the aggregation-window contract |deadline - now| < 128 (see
+    :func:`wrap8_diff`); invalid lanes return 0.
+    """
+    w = jnp.asarray(word, jnp.int32)
+    now = jnp.asarray(now, jnp.int32)
+    return jnp.where(w >= 0, now + wrap8_diff(w & WORD_TIME_MASK, wrap8(now)), 0)
 
 
 def concat(a: EventBuffer, b: EventBuffer) -> EventBuffer:

@@ -110,8 +110,11 @@ register_transport(
 
 
 def _resolve(
-    cfg: pc.PulseCommConfig, spec: str | tuple[str, ...] | tp.Transport
+    cfg: pc.PulseCommConfig,
+    spec: str | tuple[str, ...] | tp.Transport | TransportBinding,
 ) -> TransportBinding:
+    if isinstance(spec, TransportBinding):
+        return spec
     if isinstance(spec, str):
         try:
             factory = _REGISTRY[spec]
@@ -162,7 +165,8 @@ class PulseFabric:
     def __init__(
         self,
         cfg: pc.PulseCommConfig,
-        transport: str | tuple[str, ...] | tp.Transport = "local",
+        transport: (str | tuple[str, ...] | tp.Transport
+                    | TransportBinding) = "local",
         *,
         flow: FlowControlConfig | None = None,
     ):
@@ -228,7 +232,8 @@ class PulseFabric:
         inject = ready & (rank < accepted)
         stalled = jnp.sum(packed.valid & ~inject[:, None]).astype(jnp.int32)
         packed = packed._replace(
-            valid=packed.valid & inject[:, None],
+            words=jnp.where(inject[:, None], packed.words,
+                            jnp.int32(ev.WORD_SENTINEL)),
             counts=jnp.where(inject, packed.counts, 0),
         )
         # Consumer retires up to drain_rate packets -> credits come back
@@ -250,6 +255,21 @@ class PulseFabric:
                fc.RingState | None, mg.MergeBuffer | None]:
         cfg = self.cfg
         routed = rt.route(events, table)
+        # Enforce the 8-bit wrap contract at the injection boundary: only
+        # deadlines strictly inside the future half-window (0 < diff < 128)
+        # ride the wire word.  Later deadlines would alias onto near ones
+        # and deposit ghost spikes 256 steps early; already-expired ones
+        # (diff <= 0) are undeliverable anyway, and admitting them would let
+        # a word age past the wrap inside the merge queue (the merge_depth
+        # <= 128 * merge_rate bound assumes words enter with diff > 0).
+        # The pre-word path counted all of these expired at the ring;
+        # dropping them here keeps that accounting (sent still counts them,
+        # expired absorbs them) without ever putting them on the wire.
+        diff = routed.deadline - ring.now
+        in_window = (diff > 0) & (diff < ev.TIME_MOD // 2)
+        wrap_expired = jnp.sum(routed.valid & ~in_window).astype(jnp.int32)
+        sent = jnp.sum(routed.valid.astype(jnp.int32))
+        routed = routed._replace(valid=routed.valid & in_window)
         packed, traffic = pc.aggregate(cfg, routed)
 
         stalled = jnp.int32(0)
@@ -261,26 +281,25 @@ class PulseFabric:
         merge_dropped = jnp.int32(0)
         if cfg.mode == "full":
             if self.merge_enabled:
-                # Stateful rate-limited merge: the delivered stream is
+                # Stateful rate-limited merge: the delivered word stream is
                 # enqueued into the persistent per-chip queue and the
                 # merge_rate earliest-deadline events are emitted; congested
                 # events are *delayed to later steps*, not destroyed.  Only
                 # queue overflow beyond merge_depth is dropped, counted in
                 # merge_dropped, so delivered == emitted + queued + dropped
-                # holds every step by construction.
-                merge, (oa, od, ov), merge_dropped = mg.merge_step(
-                    merge, delivered.addr, delivered.deadline,
-                    delivered.valid, rate=cfg.merge_rate,
-                    use_pallas=cfg.use_pallas,
+                # holds every step by construction.  The sort key comes
+                # straight from the low bits of the words (relative to the
+                # ring clock) — no decode on the hot path.
+                merge, out_words, merge_dropped = mg.merge_step_words(
+                    merge, delivered.words, now=ring.now,
+                    rate=cfg.merge_rate, use_pallas=cfg.use_pallas,
                 )
-                delivered = pc.Delivered(addr=oa, deadline=od, valid=ov)
+                delivered = pc.Delivered(words=out_words)
             else:
-                delivered = pc.merge_delivered(cfg, delivered)
+                delivered = pc.merge_delivered(cfg, delivered, ring.now)
 
-        new_ring, expired = dl.deposit(
-            ring, delivered.addr, delivered.deadline, delivered.valid
-        )
-        sent = jnp.sum(routed.valid.astype(jnp.int32))
+        new_ring, expired = dl.deposit_words(ring, delivered.words)
+        expired = expired + wrap_expired
         n_packets = jnp.sum((packed.counts > 0).astype(jnp.int32))
         payload = jnp.sum(jnp.minimum(packed.counts, cfg.bucket_capacity))
         wire = n_packets * pc.HEADER_BYTES + payload * pc.EVENT_BYTES

@@ -38,10 +38,16 @@ from repro.core import routing as rt
 from repro.core import transport as tp
 
 # On-wire cost model (bytes). A pulse event is 14-bit address + 8-bit
-# timestamp -> 3 bytes, padded to 4 on the 64-bit datapath; an Extoll packet
-# carries ~32 bytes of header+CRC framing. Used for wire-efficiency
-# accounting, not for simulation semantics.
-EVENT_BYTES = 4
+# timestamp packed into ONE wire word (paper §2) -> 3 bytes, padded to 4 on
+# the int32 datapath — and since the fabric now exchanges exactly that one
+# word slab per step, EVENT_BYTES matches what the transport actually moves.
+# The pre-word SoA fabric exchanged three int32 arrays (addr / deadline /
+# valid) per event lane, i.e. SOA_EVENT_BYTES per event — kept for
+# before/after wire accounting in the benchmarks.  An Extoll packet carries
+# ~32 bytes of header+CRC framing.
+WORD_BYTES = 4
+EVENT_BYTES = WORD_BYTES
+SOA_EVENT_BYTES = 3 * WORD_BYTES   # legacy three-array wire format
 HEADER_BYTES = 32
 
 
@@ -66,6 +72,29 @@ class PulseCommConfig:
             raise ValueError(f"unknown mode {self.mode!r}")
         if self.neurons_per_chip > (1 << ev.ADDR_BITS):
             raise ValueError("neuron address exceeds 14-bit event format")
+        if self.n_inputs_per_chip > (1 << ev.ADDR_BITS):
+            # The wire word carries the *destination* (input-row) address in
+            # its 14-bit field; a wider input space would silently truncate
+            # and deposit spikes on the wrong synapse row.
+            raise ValueError("input address exceeds 14-bit event format")
+        if self.merge_rate > 0 and (
+                self.merge_depth > (ev.TIME_MOD // 2) * self.merge_rate):
+            # A word queued in the rate-limited merge drains within
+            # ceil(depth / rate) steps of its deadline passing (stale words
+            # sort ahead of every in-window arrival).  Keeping that bound
+            # under 128 steps guarantees no queued word can age across the
+            # 8-bit wrap and alias onto a future deadline.
+            raise ValueError(
+                f"merge_depth {self.merge_depth} exceeds "
+                f"{ev.TIME_MOD // 2} * merge_rate; a queued word could age "
+                f"past the 8-bit wrap window")
+        if self.ring_depth >= ev.TIME_MOD // 2:
+            # The wire word carries only the 8-bit wrap timestamp; the ring
+            # horizon must stay inside the wraparound half-window so the
+            # deadline of every deliverable event is reconstructible.
+            raise ValueError(
+                f"ring_depth {self.ring_depth} exceeds the 8-bit wrap "
+                f"half-window ({ev.TIME_MOD // 2 - 1})")
 
     @property
     def n_buckets(self) -> int:
@@ -91,11 +120,28 @@ class CommStats(NamedTuple):
 
 
 class Delivered(NamedTuple):
-    """Post-exchange event lanes at the destination chip."""
+    """Post-exchange event lanes at the destination chip.
 
-    addr: jax.Array      # int32[lanes]
-    deadline: jax.Array  # int32[lanes]
-    valid: jax.Array     # bool[lanes]
+    Carries the packed wire words — the only payload the network moves.
+    The SoA views (``addr`` / ``deadline`` / ``valid``) decode on demand;
+    ``deadline`` is the 8-bit on-wire timestamp (reconstruct full-width
+    deadlines with :func:`repro.core.events.word_deadline` and the ring's
+    ``now`` where needed).
+    """
+
+    words: jax.Array     # int32[lanes] packed events (WORD_SENTINEL = empty)
+
+    @property
+    def addr(self) -> jax.Array:
+        return ev.word_addr(self.words)
+
+    @property
+    def deadline(self) -> jax.Array:
+        return ev.word_time(self.words)
+
+    @property
+    def valid(self) -> jax.Array:
+        return ev.word_valid(self.words)
 
 
 def _pack(cfg: PulseCommConfig, bucket_id, addr, deadline, valid) -> bk.PackedBuckets:
@@ -137,32 +183,26 @@ def exchange(
 ) -> Delivered:
     """Stage 3: route packets to their destination chips.
 
-    Packed slabs are laid out [n_chips, buckets_per_chip, C] so that
-    all_to_all delivers slab *d* of every source to chip *d*; after the
-    exchange the leading axis indexes the *source* chip.
+    ONE ``all_to_all`` on the packed word slab — the single collective of
+    the whole step (previously three: addr, deadline and valid each crossed
+    the interconnect separately).  The slab is laid out
+    [n_chips, buckets_per_chip, C] so that all_to_all delivers slab *d* of
+    every source to chip *d*; after the exchange the leading axis indexes
+    the *source* chip.
     """
     shape = (cfg.n_chips, cfg.buckets_per_chip, cfg.bucket_capacity)
-    addr = transport.all_to_all(packed.addr.reshape(shape))
-    deadline = transport.all_to_all(packed.deadline.reshape(shape))
-    valid = transport.all_to_all(packed.valid.reshape(shape))
-    lanes = cfg.lanes_in
-    return Delivered(
-        addr=addr.reshape(lanes),
-        deadline=deadline.reshape(lanes),
-        valid=valid.reshape(lanes),
-    )
+    words = transport.all_to_all(packed.words.reshape(shape))
+    return Delivered(words=words.reshape(cfg.lanes_in))
 
 
-def merge_delivered(cfg: PulseCommConfig, delivered: Delivered) -> Delivered:
-    """Stage 4 (full mode): time-ordered k-way merge of source streams."""
-    s = cfg.n_chips * cfg.buckets_per_chip
-    c = cfg.bucket_capacity
-    a, d, v = mg.merge_streams(
-        delivered.addr.reshape(s, c),
-        delivered.deadline.reshape(s, c),
-        delivered.valid.reshape(s, c),
-    )
-    return Delivered(addr=a, deadline=d, valid=v)
+def merge_delivered(
+    cfg: PulseCommConfig, delivered: Delivered, now: jax.Array | int = 0
+) -> Delivered:
+    """Stage 4 (full mode): time-ordered k-way merge of source streams,
+    sorting the wire words directly by their wrap-aware deadline key
+    relative to ``now`` (the ring clock)."""
+    del cfg  # layout-free: the word merge sorts the flat lane set
+    return Delivered(words=mg.merge_words(delivered.words, now))
 
 
 def comm_step(

@@ -141,7 +141,24 @@ def ring_put_bytes(slab_bytes: int) -> int:
 @partial(jax.jit, static_argnames=("n_chips",))
 def exchange_matrix(dest_chip: jax.Array, valid: jax.Array, n_chips: int):
     """Traffic matrix [n_chips] of event counts by destination — the
-    per-step message-rate observable."""
+    per-step message-rate observable.
+
+    A single scatter-add (O(E)) rather than the former [E, n_chips] one-hot
+    reduction (O(E·n_chips)); out-of-range destinations are dropped, exactly
+    as the one-hot comparison never matched them (regression-pinned against
+    :func:`_exchange_matrix_onehot` in tests/test_transport.py).  Negative
+    indices are pushed past n_chips first — scatter mode="drop" only drops
+    after JAX's negative-index normalization, which would otherwise wrap
+    them onto real chips.
+    """
+    dest = jnp.where(dest_chip < 0, n_chips, dest_chip)
+    counts = jnp.zeros((n_chips,), jnp.int32)
+    return counts.at[dest].add(valid.astype(jnp.int32), mode="drop")
+
+
+def _exchange_matrix_onehot(dest_chip: jax.Array, valid: jax.Array,
+                            n_chips: int):
+    """Reference one-hot implementation, kept as the regression oracle."""
     onehot = (
         (dest_chip[:, None] == jnp.arange(n_chips)[None, :]) & valid[:, None]
     )

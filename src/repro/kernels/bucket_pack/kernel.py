@@ -1,17 +1,23 @@
 """Pallas TPU kernel: bucket-buffer event aggregation (paper §3.1 hot path).
 
-One grid program per bucket row.  The event stream (bucket ids, payload
-lanes) sits in VMEM as full blocks; each program
+One grid program per bucket row.  The event stream (bucket ids, packed wire
+words — see ``repro.core.events``) sits in VMEM as full blocks; each program
 
-  1. builds its match mask  ``match = (bucket_id == b) & valid``,
+  1. builds its match mask  ``match = (bucket_id == b) & (word >= 0)``
+     (validity is the word's sign: the all-ones sentinel is the reserved
+     "no event" encoding),
   2. ranks matches with an exclusive prefix sum (``cumsum`` lowers to a VPU
      scan on TPU),
   3. materializes its output row with a slot-selection reduce:
-     ``row[c] = sum_e [slot[e] == c] * payload[e]`` — a [C, E_tile]
+     ``row[c] = sum_e [slot[e] == c] * word[e]`` — a [C, E_tile]
      broadcast-compare + reduction that maps onto the VPU without any
      per-element scatter (TPU has no fast random VMEM scatter; this is the
      hardware-adaptation of the FPGA FIFO insert),
   4. accumulates counts/overflow.
+
+Packing the event into one word shrinks the kernel from three payload
+accumulators (addr / deadline / valid) to a single int32 accumulator — a
+third of the VMEM traffic and VPU reduce work of the SoA version.
 
 The event stream is tiled along E so the [C, E_tile] compare window stays
 small; the running per-bucket fill level carries across tiles in a loop
@@ -30,11 +36,13 @@ from jax.experimental import pallas as pl
 
 E_TILE = 512  # events per inner tile; [C, E_TILE] compare window in VMEM
 
+_SENTINEL = -1  # events.WORD_SENTINEL (kept literal: kernel-local constant)
+
 
 def _kernel(
-    bucket_id_ref, addr_ref, deadline_ref, valid_ref,
-    addr_out_ref, dead_out_ref, valid_out_ref, count_ref, overflow_ref,
-    *, capacity: int, sentinel: int,
+    bucket_id_ref, word_ref,
+    word_out_ref, count_ref, overflow_ref,
+    *, capacity: int,
 ):
     b = pl.program_id(0)
     e_total = bucket_id_ref.shape[1]
@@ -43,11 +51,11 @@ def _kernel(
     slots_c = jax.lax.broadcasted_iota(jnp.int32, (capacity, E_TILE), 0)
 
     def tile_body(i, carry):
-        base, acc_addr, acc_dead, acc_hit, n_match = carry
+        base, acc_word, acc_hit, n_match = carry
         sl = (slice(0, 1), pl.ds(i * E_TILE, E_TILE))
         bid = bucket_id_ref[sl]                      # [1, E_TILE]
-        val = valid_ref[sl]
-        match = jnp.logical_and(bid == b, val != 0)  # [1, E_TILE]
+        word = word_ref[sl]
+        match = jnp.logical_and(bid == b, word >= 0)  # [1, E_TILE]
         m32 = match.astype(jnp.int32)
         # exclusive rank within this bucket, offset by fill level so far
         excl = jnp.cumsum(m32, axis=1) - m32
@@ -55,55 +63,45 @@ def _kernel(
         tile_count = jnp.sum(m32)
         # slot-selection reduce: pick[c, e] = (slot[e] == c) & match[e]
         pick = jnp.logical_and(slot == slots_c, match).astype(jnp.int32)
-        addr_t = addr_ref[sl].astype(jnp.int32)
-        dead_t = deadline_ref[sl].astype(jnp.int32)
-        acc_addr = acc_addr + jnp.sum(pick * addr_t, axis=1)   # [C]
-        acc_dead = acc_dead + jnp.sum(pick * dead_t, axis=1)
+        acc_word = acc_word + jnp.sum(pick * word, axis=1)     # [C]
         acc_hit = acc_hit + jnp.sum(pick, axis=1)
-        return base + tile_count, acc_addr, acc_dead, acc_hit, n_match + tile_count
+        return base + tile_count, acc_word, acc_hit, n_match + tile_count
 
     zero_row = jnp.zeros((capacity,), jnp.int32)
-    _, acc_addr, acc_dead, acc_hit, n_match = jax.lax.fori_loop(
+    _, acc_word, acc_hit, n_match = jax.lax.fori_loop(
         0, n_tiles, tile_body,
-        (jnp.int32(0), zero_row, zero_row, zero_row, jnp.int32(0)),
+        (jnp.int32(0), zero_row, zero_row, jnp.int32(0)),
     )
     hit = acc_hit > 0
-    addr_out_ref[0, :] = jnp.where(hit, acc_addr, sentinel)
-    dead_out_ref[0, :] = jnp.where(hit, acc_dead, 0)
-    valid_out_ref[0, :] = hit.astype(jnp.int32)
+    word_out_ref[0, :] = jnp.where(hit, acc_word, _SENTINEL)
     count_ref[0, 0] = n_match
     overflow_ref[0, 0] = jnp.maximum(n_match - capacity, 0)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_buckets", "capacity", "interpret", "sentinel")
+    jax.jit, static_argnames=("n_buckets", "capacity", "interpret")
 )
 def bucket_pack_pallas(
     bucket_id: jax.Array,
-    addr: jax.Array,
-    deadline: jax.Array,
-    valid: jax.Array,
+    words: jax.Array,
     *,
     n_buckets: int,
     capacity: int,
-    sentinel: int = -1,
     interpret: bool = False,
 ):
     """Raw kernel invocation — inputs must be padded: E % E_TILE == 0.
 
-    Returns (addr[B,C], deadline[B,C], valid_i32[B,C], counts[B,1],
-    overflow[B,1]).
+    ``words`` are the packed wire words (negative = invalid lane).
+    Returns (words[B,C], counts[B,1], overflow[B,1]).
     """
     e = bucket_id.shape[0]
     if e % E_TILE != 0:
         raise ValueError(f"E={e} must be padded to a multiple of {E_TILE}")
-    kernel = functools.partial(_kernel, capacity=capacity, sentinel=sentinel)
+    kernel = functools.partial(_kernel, capacity=capacity)
     ev_spec = pl.BlockSpec((1, e), lambda b: (0, 0))
     row_spec = pl.BlockSpec((1, capacity), lambda b: (b, 0))
     scalar_spec = pl.BlockSpec((1, 1), lambda b: (b, 0))
     out_shapes = (
-        jax.ShapeDtypeStruct((n_buckets, capacity), jnp.int32),
-        jax.ShapeDtypeStruct((n_buckets, capacity), jnp.int32),
         jax.ShapeDtypeStruct((n_buckets, capacity), jnp.int32),
         jax.ShapeDtypeStruct((n_buckets, 1), jnp.int32),
         jax.ShapeDtypeStruct((n_buckets, 1), jnp.int32),
@@ -112,8 +110,8 @@ def bucket_pack_pallas(
     return pl.pallas_call(
         kernel,
         grid=(n_buckets,),
-        in_specs=[ev_spec, ev_spec, ev_spec, ev_spec],
-        out_specs=(row_spec, row_spec, row_spec, scalar_spec, scalar_spec),
+        in_specs=[ev_spec, ev_spec],
+        out_specs=(row_spec, scalar_spec, scalar_spec),
         out_shape=out_shapes,
         interpret=interpret,
-    )(as_row(bucket_id), as_row(addr), as_row(deadline), as_row(valid))
+    )(as_row(bucket_id), as_row(words))

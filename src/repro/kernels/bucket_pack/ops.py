@@ -1,8 +1,10 @@
 """jit'd public wrapper for the bucket_pack kernel.
 
-Pads the event stream to the kernel tile size, invokes the Pallas kernel
-(interpret=True off-TPU so the kernel body executes on CPU for validation),
-and re-assembles the PackedBuckets structure used across repro.core.
+Encodes the SoA event lanes into packed wire words, pads the stream to the
+kernel tile size (padding lanes carry the all-ones sentinel, so they can
+never match a bucket), invokes the Pallas kernel (interpret=True off-TPU so
+the kernel body executes on CPU for validation), and re-assembles the
+word-based PackedBuckets structure used across repro.core.
 """
 
 from __future__ import annotations
@@ -13,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import buckets as bk
+from repro.core import events as ev
 from repro.kernels.bucket_pack.kernel import E_TILE, bucket_pack_pallas
 
 
@@ -33,20 +36,19 @@ def bucket_pack(
 ) -> bk.PackedBuckets:
     if interpret is None:
         interpret = not _on_tpu()
+    words = ev.encode_word(addr, deadline, valid)
     e = bucket_id.shape[0]
     pad = (-e) % E_TILE
     if pad:
-        zi = lambda x: jnp.pad(x.astype(jnp.int32), (0, pad))
-        bucket_id, addr, deadline = zi(bucket_id), zi(addr), zi(deadline)
-        valid = jnp.pad(valid.astype(jnp.int32), (0, pad))
-    a, d, v, counts, overflow = bucket_pack_pallas(
-        bucket_id, addr, deadline, valid,
+        bucket_id = jnp.pad(bucket_id.astype(jnp.int32), (0, pad))
+        words = jnp.pad(words, (0, pad),
+                        constant_values=jnp.int32(ev.WORD_SENTINEL))
+    w, counts, overflow = bucket_pack_pallas(
+        bucket_id, words,
         n_buckets=n_buckets, capacity=capacity, interpret=interpret,
     )
     return bk.PackedBuckets(
-        addr=a,
-        deadline=d,
-        valid=v != 0,
+        words=w,
         counts=counts[:, 0],
         overflow=jnp.sum(overflow).astype(jnp.int32),
     )

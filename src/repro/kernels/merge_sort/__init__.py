@@ -1,4 +1,4 @@
 from repro.kernels.merge_sort import ops, ref
-from repro.kernels.merge_sort.ops import merge_sort
+from repro.kernels.merge_sort.ops import merge_sort, merge_sort_words
 
-__all__ = ["ops", "ref", "merge_sort"]
+__all__ = ["ops", "ref", "merge_sort", "merge_sort_words"]

@@ -57,6 +57,56 @@ def _compare_exchange(lanes, k: int, j: int, n: int):
     return tuple(exchange(x) for x in lanes)
 
 
+def _kernel_words(key_ref, word_ref, word_out, *, n: int):
+    """Word-path kernel: sort packed wire words by a precomputed wrap-aware
+    key (see events.word_sort_key), ties broken by original lane index.
+
+    One payload lane instead of three — the sorting network exchanges
+    (key, idx, word) tuples, 3 selects per substage vs. the SoA path's 5.
+    """
+    key = key_ref[0, :]
+    word = word_ref[0, :]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)[0, :]
+
+    lanes = (key, idx, word)
+    k = 2
+    while k <= n:          # static network: unrolled at trace time
+        j = k // 2
+        while j >= 1:
+            lanes = _compare_exchange(lanes, k, j, n)
+            j //= 2
+        k *= 2
+
+    word_out[0, :] = lanes[2]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_sort_words_pallas(
+    key: jax.Array,
+    words: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw word-kernel invocation — L must be a power of two (ops.py pads).
+
+    Returns words[L] sorted ascending by (key, original lane).
+    """
+    n = words.shape[0]
+    if n & (n - 1):
+        raise ValueError(f"L={n} must be a power of two")
+    kernel = functools.partial(_kernel_words, n=n)
+    row_spec = pl.BlockSpec((1, n), lambda: (0, 0))
+    as_row = lambda x: x.astype(jnp.int32).reshape(1, n)
+    out = pl.pallas_call(
+        kernel,
+        in_specs=[row_spec, row_spec],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+        interpret=interpret,
+    )(as_row(key), as_row(words))
+    return out[0]
+
+
 def _kernel(addr_ref, dead_ref, valid_ref, addr_out, dead_out, valid_out, *, n: int):
     addr = addr_ref[0, :]
     dead = dead_ref[0, :]

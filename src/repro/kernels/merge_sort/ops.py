@@ -16,7 +16,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.merge_sort.kernel import merge_sort_pallas
+from repro.core import events as ev
+from repro.kernels.merge_sort.kernel import (merge_sort_pallas,
+                                             merge_sort_words_pallas)
 
 MIN_LANES = 128
 
@@ -51,3 +53,31 @@ def merge_sort(
         valid = jnp.pad(valid.astype(jnp.int32), (0, pad))
     a, d, v = merge_sort_pallas(addr, deadline, valid, interpret=interpret)
     return a[:l], d[:l], v[:l] != 0
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_sort_words(
+    words: jax.Array,
+    now: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Sort packed wire words ascending by their wrap-aware deadline key
+    relative to ``now`` (events.word_sort_key), stable in lane order — the
+    word-representation entry the merge hot path uses.
+
+    Padding lanes carry the sentinel word, whose key (== TIME_MOD) ties
+    with real invalid lanes but sits at idx >= L, so the lexicographic
+    comparator parks padding strictly after every real lane: the leading L
+    lanes of the sorted result are exactly the sorted real lanes.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    l = words.shape[0]
+    n = max(MIN_LANES, _next_pow2(l))
+    pad = n - l
+    if pad:
+        words = jnp.pad(words.astype(jnp.int32), (0, pad),
+                        constant_values=jnp.int32(ev.WORD_SENTINEL))
+    key = ev.word_sort_key(words, now)
+    return merge_sort_words_pallas(key, words, interpret=interpret)[:l]

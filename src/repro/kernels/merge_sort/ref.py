@@ -21,3 +21,12 @@ def merge_sort_ref(
     key = jnp.where(valid, deadline, _INF)
     order = jnp.argsort(key, stable=True)
     return addr[order], deadline[order], valid[order]
+
+
+def merge_sort_words_ref(words: jax.Array, now) -> jax.Array:
+    """Word-path oracle: stable ascending sort by the wrap-aware deadline
+    key relative to ``now`` — the contract of repro.core.merge."""
+    from repro.core import events as ev
+
+    order = jnp.argsort(ev.word_sort_key(words, now), stable=True)
+    return words[order]

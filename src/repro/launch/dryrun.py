@@ -263,9 +263,7 @@ def lower_snn(n_chips: int, mode: str = "simplified",
     merge_state = None
     if mode == "full" and merge_rate > 0:
         merge_state = mg.MergeBuffer(
-            addr=sds((n_chips, c.merge_depth), i32),
-            deadline=sds((n_chips, c.merge_depth), i32),
-            valid=sds((n_chips, c.merge_depth), jnp.bool_),
+            words=sds((n_chips, c.merge_depth), i32),
         )
     state = net.NetworkState(
         neuron=stacked(nr.adex_init(nparams)),

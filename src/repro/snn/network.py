@@ -13,9 +13,10 @@ Per-step protocol (time t):
 Two inter-chip communication paths:
 
 * ``event`` — the paper's path: events, routing LUT, buckets, exchange —
-  all through :class:`repro.core.fabric.PulseFabric`.  Exact integer
-  semantics, finite capacities, explicit loss accounting.  Not
-  differentiable (addresses are discrete).
+  all through :class:`repro.core.fabric.PulseFabric`, which moves the
+  packed single-word wire format (one int32 per event, one ``all_to_all``
+  per step) end-to-end.  Exact integer semantics, finite capacities,
+  explicit loss accounting.  Not differentiable (addresses are discrete).
 * ``dense`` — differentiable reference: the same routing table applied as a
   scatter-add of float spike values into the destination rings (infinite
   capacity).  Used for surrogate-gradient training and as the oracle in

@@ -1,6 +1,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import buckets as bk
@@ -55,6 +56,78 @@ def test_sorted_slots_match_onehot_slots(stream):
     np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
     v = np.asarray(valid)
     np.testing.assert_array_equal(np.asarray(s1)[v], np.asarray(s2)[v])
+
+
+@given(event_streams(), st.integers(1, 8))
+def test_pack_identical_through_either_slot_impl(stream, capacity):
+    """bk.pack routes through compute_slots_sorted above the size threshold;
+    the packed output must be identical whichever ranking runs — including
+    overflow accounting."""
+    bid, valid, nb = stream
+    e = bid.shape[0]
+    addr = jnp.arange(e, dtype=jnp.int32)
+    dead = jnp.arange(e, dtype=jnp.int32) % 23
+    a = bk.pack(bid, addr, dead, valid, n_buckets=nb, capacity=capacity,
+                slots="onehot")
+    b = bk.pack(bid, addr, dead, valid, n_buckets=nb, capacity=capacity,
+                slots="sorted")
+    for f in ("words", "counts", "overflow"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+@pytest.mark.parametrize("case", ["all_invalid", "overflow", "one_bucket",
+                                  "empty_mix"])
+def test_slot_impls_agree_on_edge_cases(case):
+    """Deterministic pins for the corners the property test samples:
+    all-invalid streams, heavy overflow, single-bucket pile-up."""
+    if case == "all_invalid":
+        bid = jnp.asarray([0, 1, 2, 1], jnp.int32)
+        valid = jnp.zeros((4,), bool)
+        nb, cap = 3, 2
+    elif case == "overflow":
+        bid = jnp.zeros((64,), jnp.int32)
+        valid = jnp.ones((64,), bool)
+        nb, cap = 2, 4                      # 60 events overflow bucket 0
+    elif case == "one_bucket":
+        bid = jnp.full((16,), 5, jnp.int32)
+        valid = jnp.ones((16,), bool)
+        nb, cap = 6, 16
+    else:
+        bid = jnp.asarray([2, 0, 2, 1, 2, 0], jnp.int32)
+        valid = jnp.asarray([True, False, True, False, True, True])
+        nb, cap = 3, 2
+    s1, c1 = bk.compute_slots(bid, valid, nb)
+    s2, c2 = bk.compute_slots_sorted(bid, valid, nb)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    v = np.asarray(valid)
+    np.testing.assert_array_equal(np.asarray(s1)[v], np.asarray(s2)[v])
+    e = bid.shape[0]
+    addr = jnp.arange(e, dtype=jnp.int32)
+    dead = jnp.arange(e, dtype=jnp.int32)
+    a = bk.pack(bid, addr, dead, valid, n_buckets=nb, capacity=cap,
+                slots="onehot")
+    b = bk.pack(bid, addr, dead, valid, n_buckets=nb, capacity=cap,
+                slots="sorted")
+    np.testing.assert_array_equal(np.asarray(a.words), np.asarray(b.words))
+    assert int(a.overflow) == int(b.overflow)
+
+
+def test_pack_auto_routes_by_work_threshold():
+    """The documented E * n_buckets threshold picks the sort-based ranking
+    for big dispatch problems and the one-hot for paper-scale ones."""
+    assert bk.SORTED_SLOTS_MIN_WORK == 1 << 16
+    small = bk._slots(jnp.zeros((128,), jnp.int32), jnp.ones((128,), bool),
+                      8, None)
+    # identical numbers either way; the auto path must agree with both
+    bid = jnp.arange(2048, dtype=jnp.int32) % 64
+    valid = jnp.ones((2048,), bool)
+    auto = bk.pack(bid, bid, bid, valid, n_buckets=64, capacity=32)
+    forced = bk.pack(bid, bid, bid, valid, n_buckets=64, capacity=32,
+                     slots="sorted")                 # 2048*64 > 2**16
+    np.testing.assert_array_equal(np.asarray(auto.words),
+                                  np.asarray(forced.words))
+    del small
 
 
 def test_static_vs_dynamic_bucket_ids():

@@ -8,6 +8,8 @@ import sys
 import textwrap
 import warnings
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,6 +18,7 @@ import pytest
 from repro.core import delays as dl
 from repro.core import events as ev
 from repro.core import fabric as fb
+from repro.core import merge as mg
 from repro.core import pulse_comm as pc
 from repro.core import routing as rt
 from repro.core import transport as tp
@@ -40,36 +43,87 @@ def _setup(n_chips, n_neurons, capacity, mode="simplified", bpc=1, key=0,
     return cfg, ebs, tables, rings
 
 
+class _SoADelivered(NamedTuple):
+    """Pre-refactor delivered lanes: three separate arrays."""
+
+    addr: jax.Array
+    deadline: jax.Array
+    valid: jax.Array
+
+
+def _soa_pack(bucket_id, addr, deadline, valid, *, n_buckets, capacity):
+    """Frozen pre-word-format bucket packing: three scatters, full-width
+    deadlines (the seed's bk.pack).  benchmarks/aggregation.py carries the
+    same frozen baseline for timing — keep the two in sync if the recorded
+    pre-refactor semantics ever need correcting."""
+    from repro.core import buckets as bk
+
+    slot, counts = bk.compute_slots(bucket_id, valid, n_buckets)
+    keep = valid & (slot < capacity)
+    b = jnp.where(keep, bucket_id, n_buckets)
+    s = jnp.where(keep, slot, capacity)
+    out_addr = jnp.full((n_buckets, capacity), ev.ADDR_SENTINEL, jnp.int32)
+    out_dead = jnp.zeros((n_buckets, capacity), jnp.int32)
+    out_valid = jnp.zeros((n_buckets, capacity), bool)
+    out_addr = out_addr.at[b, s].set(jnp.where(keep, addr, ev.ADDR_SENTINEL),
+                                     mode="drop")
+    out_dead = out_dead.at[b, s].set(jnp.where(keep, deadline, 0), mode="drop")
+    out_valid = out_valid.at[b, s].set(keep, mode="drop")
+    overflow = jnp.sum(valid & (slot >= capacity)).astype(jnp.int32)
+    return out_addr, out_dead, out_valid, counts, overflow
+
+
 def _legacy_local_oracle(cfg, events, table, rings):
-    """The pre-fabric single-device path: vmap route+aggregate, explicit
-    chip-axis transpose, vmap merge+deposit.  Kept here as the oracle the
-    fabric's internal-vmap path must match bitwise."""
+    """The pre-refactor single-device path, frozen: SoA packing, THREE
+    chip-axis transposes (one per lane array), full-width-deadline merge,
+    SoA deposit.  Kept here as the event-semantics oracle the fabric's
+    single-word path must match under the 8-bit wrap contract."""
+    from repro.core import buckets as bk
+
     transport = tp.LocalTransport(n_chips=cfg.n_chips)
     routed = jax.vmap(rt.route)(events, table)
-    packed, traffic = jax.vmap(lambda r: pc.aggregate(cfg, r))(routed)
+
+    def one_chip_pack(r):
+        if cfg.mode == "simplified":
+            bid = bk.static_bucket_ids(r.dest_chip, n_chips=cfg.n_chips,
+                                       streams=cfg.buckets_per_chip)
+        else:
+            bid = bk.dynamic_bucket_ids(
+                r.dest_chip, r.deadline, n_chips=cfg.n_chips,
+                pool_per_chip=cfg.buckets_per_chip, window=cfg.time_window)
+        slabs = _soa_pack(bid, r.dest_addr, r.deadline, r.valid,
+                          n_buckets=cfg.n_buckets,
+                          capacity=cfg.bucket_capacity)
+        traffic = tp._exchange_matrix_onehot(r.dest_chip, r.valid,
+                                             cfg.n_chips)
+        return slabs, traffic
+
+    (addr_s, dead_s, val_s, counts, overflow), traffic = jax.vmap(
+        one_chip_pack)(routed)
     shape = (cfg.n_chips, cfg.n_chips, cfg.buckets_per_chip,
              cfg.bucket_capacity)
-    addr = transport.all_to_all(packed.addr.reshape(shape))
-    dead = transport.all_to_all(packed.deadline.reshape(shape))
-    val = transport.all_to_all(packed.valid.reshape(shape))
+    addr = transport.all_to_all(addr_s.reshape(shape))
+    dead = transport.all_to_all(dead_s.reshape(shape))
+    val = transport.all_to_all(val_s.reshape(shape))
     lanes = cfg.lanes_in
-    delivered = pc.Delivered(
+    delivered = _SoADelivered(
         addr=addr.reshape(cfg.n_chips, lanes),
         deadline=dead.reshape(cfg.n_chips, lanes),
         valid=val.reshape(cfg.n_chips, lanes),
     )
     if cfg.mode == "full":
-        delivered = jax.vmap(lambda d: pc.merge_delivered(cfg, d))(delivered)
+        a, d, v = jax.vmap(mg.merge_streams)(
+            delivered.addr, delivered.deadline, delivered.valid)
+        delivered = _SoADelivered(addr=a, deadline=d, valid=v)
     new_rings, expired = jax.vmap(
         lambda r, d: dl.deposit(r, d.addr, d.deadline, d.valid)
     )(rings, delivered)
     sent = jax.vmap(lambda r: jnp.sum(r.valid.astype(jnp.int32)))(routed)
-    n_packets = jnp.sum((packed.counts > 0).astype(jnp.int32), axis=-1)
-    payload = jnp.sum(jnp.minimum(packed.counts, cfg.bucket_capacity),
-                      axis=-1)
+    n_packets = jnp.sum((counts > 0).astype(jnp.int32), axis=-1)
+    payload = jnp.sum(jnp.minimum(counts, cfg.bucket_capacity), axis=-1)
     wire = (n_packets * pc.HEADER_BYTES + payload * pc.EVENT_BYTES)
     return new_rings, delivered, {
-        "sent": sent, "overflow": packed.overflow, "expired": expired,
+        "sent": sent, "overflow": overflow, "expired": expired,
         "wire_bytes": wire.astype(jnp.int32), "traffic": traffic,
     }
 
@@ -82,10 +136,14 @@ def test_local_fabric_matches_legacy_path_bitwise(mode, bpc):
     oring, odel, ostats = _legacy_local_oracle(cfg, ebs, tables, rings)
     np.testing.assert_array_equal(np.asarray(res.ring.ring),
                                   np.asarray(oring.ring))
-    for lane in ("addr", "deadline", "valid"):
-        np.testing.assert_array_equal(
-            np.asarray(getattr(res.delivered, lane)),
-            np.asarray(getattr(odel, lane)), err_msg=lane)
+    np.testing.assert_array_equal(np.asarray(res.delivered.addr),
+                                  np.asarray(odel.addr), err_msg="addr")
+    np.testing.assert_array_equal(np.asarray(res.delivered.valid),
+                                  np.asarray(odel.valid), err_msg="valid")
+    # the word carries the 8-bit on-wire timestamp: equal modulo wrap8
+    np.testing.assert_array_equal(np.asarray(res.delivered.deadline),
+                                  np.asarray(ev.wrap8(odel.deadline)),
+                                  err_msg="deadline")
     for name, want in ostats.items():
         np.testing.assert_array_equal(
             np.asarray(getattr(res.stats, name)), np.asarray(want),

@@ -56,6 +56,48 @@ def test_merge_sort_matches_ref_bit_exact(l, max_dead, density):
                                       err_msg=name)
 
 
+@pytest.mark.parametrize("l,max_ahead,density,now",
+                         [(1, 4, 1.0, 0), (7, 3, 0.5, 10), (128, 8, 0.6, 250),
+                          (136, 100, 0.3, 200), (500, 2, 0.9, 255),
+                          (1024, 64, 0.0, 1000003)])
+def test_merge_sort_words_matches_ref_bit_exact(l, max_ahead, density, now):
+    """The word-path bitonic network must reproduce the stable wrap-key
+    argsort exactly — including deadlines that wrap past 255, heavy ties,
+    and invalid (sentinel) lanes."""
+    from repro.core import events as ev
+    from repro.kernels.merge_sort.ref import merge_sort_words_ref
+
+    key = jax.random.PRNGKey(l * max_ahead + int(density * 10) + now)
+    k1, k2, k3 = jax.random.split(key, 3)
+    addr = jax.random.randint(k1, (l,), 0, 1 << 14)
+    dead = now + jax.random.randint(k2, (l,), -max_ahead, max_ahead + 1)
+    valid = jax.random.uniform(k3, (l,)) < density
+    words = ev.encode_word(addr, dead, valid)
+    from repro.kernels.merge_sort import merge_sort_words
+
+    got = merge_sort_words(words, jnp.int32(now))
+    want = merge_sort_words_ref(words, jnp.int32(now))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_merge_sort_words_under_vmap():
+    """The fabric's local path runs the word kernel per chip under vmap,
+    with a per-chip traced clock."""
+    from repro.core import events as ev
+    from repro.kernels.merge_sort import merge_sort_words
+    from repro.kernels.merge_sort.ref import merge_sort_words_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    addr = jax.random.randint(ks[0], (4, 70), 0, 100)
+    dead = jax.random.randint(ks[1], (4, 70), 240, 280)
+    valid = jax.random.uniform(ks[2], (4, 70)) < 0.5
+    words = ev.encode_word(addr, dead, valid)
+    now = jnp.asarray([0, 250, 255, 123], jnp.int32)
+    got = jax.vmap(merge_sort_words)(words, now)
+    want = jax.vmap(merge_sort_words_ref)(words, now)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_merge_sort_under_vmap():
     """The fabric's local path runs the kernel per chip under vmap."""
     ks = jax.random.split(jax.random.PRNGKey(0), 3)

@@ -52,6 +52,33 @@ def test_exchange_matrix_counts():
     np.testing.assert_array_equal(np.asarray(m), [2, 1, 1])
 
 
+def test_exchange_matrix_scatter_matches_onehot_reference():
+    """Regression for the O(E) scatter-add rewrite: identical to the one-hot
+    O(E·n_chips) reduction on random streams, including out-of-range and
+    negative destinations (both implementations must ignore them) and
+    all-invalid streams."""
+    key = jax.random.PRNGKey(7)
+    for n_chips in (1, 3, 8):
+        for e in (1, 17, 256):
+            k1, k2 = jax.random.split(jax.random.fold_in(key, n_chips * e))
+            dest = jax.random.randint(k1, (e,), -2, n_chips + 2,
+                                      dtype=jnp.int32)
+            valid = jax.random.uniform(k2, (e,)) < 0.6
+            got = tp.exchange_matrix(dest, valid, n_chips)
+            want = tp._exchange_matrix_onehot(dest, valid, n_chips)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # all-invalid
+    dest = jnp.asarray([0, 1], jnp.int32)
+    got = tp.exchange_matrix(dest, jnp.zeros((2,), bool), 2)
+    np.testing.assert_array_equal(np.asarray(got), [0, 0])
+    # the jit static-argname contract survives: n_chips stays static
+    jitted = jax.jit(lambda d, v: tp.exchange_matrix(d, v, 4))
+    np.testing.assert_array_equal(
+        np.asarray(jitted(jnp.asarray([3, 3], jnp.int32),
+                          jnp.asarray([True, True]))),
+        [0, 0, 0, 2])
+
+
 _SUBPROCESS_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
