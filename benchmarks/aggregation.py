@@ -120,7 +120,9 @@ def _soa_reference_step(cfg, counter: dict):
             stalled=jnp.zeros_like(sent),
             utilization=jnp.minimum(counts, cfg.bucket_capacity).astype(
                 jnp.float32).mean(axis=-1) / cfg.bucket_capacity,
-            wire_bytes=wire.astype(jnp.int32), traffic=traffic)
+            wire_bytes=wire.astype(jnp.int32), traffic=traffic,
+            link_words=jnp.zeros((cfg.n_chips, 1), jnp.int32),
+            link_backlog=jnp.zeros((cfg.n_chips, 1), jnp.int32))
         return new_rings, stats
 
     return step

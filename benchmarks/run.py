@@ -4,6 +4,9 @@
                  merge congestion, message-rate scaling (paper §3.1 + the
                  Extoll bandwidth/message-rate axes), with before/after
                  comparison against the pre-word-format three-array exchange
+  topology     — dense vs torus vs switch-tree routed fabric: us/step,
+                 wire words per link, max link occupancy (paper §2.1's
+                 switched network / arXiv:2111.15296's switch hierarchy)
   latency      — ISI-doubling demo timing + per-hop latency (paper §4)
   loss_budget  — event loss vs axonal-delay budget (paper §3.1 expiry)
   lm_roofline  — per-(arch x shape) roofline terms from the dry-run
@@ -29,11 +32,12 @@ def main(argv=None) -> None:
                    help="tiny sweeps only (CI benchmark smoke)")
     args = p.parse_args(argv)
 
-    from benchmarks import aggregation, latency, lm_roofline, loss_budget
+    from benchmarks import (aggregation, latency, lm_roofline, loss_budget,
+                            topology)
 
     print("name,us_per_call,wire_bytes,derived")
     rows = []
-    for mod in (aggregation, latency, loss_budget, lm_roofline):
+    for mod in (aggregation, topology, latency, loss_budget, lm_roofline):
         rows.extend(mod.main(csv=True, smoke=args.smoke))
 
     if args.json:

@@ -1,0 +1,113 @@
+"""Benchmark: switched-topology sweep (dense vs torus vs switch-tree).
+
+One fabric step per topology over the same spike load, measuring
+  * us/step — the collective-schedule cost of hop-by-hop forwarding
+    (ppermute rounds) against the single dense all_to_all;
+  * wire words per link — mean per-port occupancy, the per-link load the
+    modeled bandwidth must carry;
+  * max link occupancy — the hottest link (torus transit concentrates
+    traffic; the tree's trunk aggregates a whole group), the quantity that
+    sets the congestion/backlog trade-off of the topology choice.
+
+Rows land in ``benchmarks/run.py --json`` (BENCH_fabric.json), so the
+per-topology trajectory is tracked across PRs alongside the aggregation
+sweeps.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delays as dl
+from repro.core import events as ev
+from repro.core import pulse_comm as pc
+from repro.core import routing as rt
+from repro.core import topology as tpo
+from repro.core.fabric import PulseFabric
+
+
+def _topologies(n_chips: int):
+    """The sweep cells: dense crossbar, 2-D torus and the paper's
+    chip→FPGA→switch tree, all over the same chip count."""
+    nx = int(np.sqrt(n_chips))
+    while n_chips % nx:
+        nx -= 1
+    groups = max(g for g in range(1, n_chips + 1)
+                 if n_chips % g == 0 and g * g <= n_chips)
+    return [
+        ("dense", tpo.direct(n_chips, link_latency=1)),
+        (f"torus2d_{nx}x{n_chips // nx}",
+         tpo.torus2d(nx, n_chips // nx, link_latency=1)),
+        (f"switch_tree_{groups}x{n_chips // groups}",
+         tpo.switch_tree(groups, n_chips // groups, link_latency=1,
+                         trunk_latency=1)),
+    ]
+
+
+def topology_sweep(n_chips=16, n_neurons=128, rate=0.3, seed=0, reps=5):
+    key = jax.random.PRNGKey(seed)
+    cfg = pc.PulseCommConfig(
+        n_chips=n_chips, neurons_per_chip=n_neurons,
+        n_inputs_per_chip=n_neurons, event_capacity=n_neurons,
+        bucket_capacity=16, ring_depth=16)
+    table = rt.random_table(key, n_neurons, n_chips, max_delay=12,
+                            min_delay=6)
+    tables = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_chips,) + x.shape), table)
+    spikes = jax.random.uniform(key, (n_chips, n_neurons)) < rate
+    ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, n_neurons)[0])(spikes)
+    rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
+        jnp.arange(n_chips))
+
+    rows = []
+    for name, topo in _topologies(n_chips):
+        fab = PulseFabric(cfg, transport=topo)
+        step = jax.jit(fab.step)
+        res = step(ebs, tables, rings)
+        jax.block_until_ready(res.ring.ring)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            res = step(ebs, tables, rings)
+        jax.block_until_ready(res.ring.ring)
+        us = (time.perf_counter() - t0) / reps * 1e6
+
+        link_words = np.asarray(res.stats.link_words)   # [n_chips, n_ports]
+        wire = int(res.stats.wire_bytes.sum())
+        rows.append({
+            "topology": name,
+            "n_chips": n_chips,
+            "max_path_latency": int(tpo.compile_routes(topo).latency.max()),
+            "us_per_step": us,
+            "wire_bytes": wire,
+            "total_link_words": int(link_words.sum()),
+            "mean_words_per_link": float(link_words.mean()),
+            "max_link_occupancy": int(link_words.max()),
+            "expired": int(np.asarray(res.stats.expired).sum()),
+        })
+    return rows
+
+
+def main(csv=True, smoke=False):
+    """Returns rows of (name, us_per_call, wire_bytes, derived) for
+    benchmarks/run.py."""
+    out = []
+    for r in topology_sweep(n_chips=8 if smoke else 16,
+                            n_neurons=64 if smoke else 128):
+        out.append((
+            "topology_%s" % r["topology"], r["us_per_step"], r["wire_bytes"],
+            f"max_link={r['max_link_occupancy']};"
+            f"mean_link={r['mean_words_per_link']:.1f};"
+            f"total_link_words={r['total_link_words']};"
+            f"lat={r['max_path_latency']};expired={r['expired']}"))
+    if csv:
+        for name, us, wire, derived in out:
+            print(f"{name},{us:.1f},{wire},{derived}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

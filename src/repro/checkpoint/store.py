@@ -127,16 +127,57 @@ def latest_step(base: str) -> int | None:
     return max(steps) if steps else None
 
 
-def restore(base: str, step: int, target: Any, *, shardings: Any = None) -> Any:
+# Leaf names of the PR-2 three-array MergeBuffer.  A checkpoint carrying
+# them under a prefix where the target expects the word-format queue (a
+# single ``words`` leaf) predates the packed wire-word refactor and cannot
+# be restored into it — the decoded views became properties, so a naive
+# structural restore would silently misbehave.
+_PRE_WORD_MERGE_LEAVES = ("addr", "deadline", "valid")
+
+
+def _stale_merge_hint(key: str, manifest_keys) -> str | None:
+    if not key.endswith("/words") and key != "words":
+        return None
+    prefix = key[: -len("words")]
+    if all(prefix + f in manifest_keys for f in _PRE_WORD_MERGE_LEAVES):
+        return (
+            f"checkpoint holds a pre-word-format (PR-2) MergeBuffer at "
+            f"{prefix.rstrip('/') or '<root>'!r} (addr/deadline/valid "
+            f"leaves) where the target expects the packed words queue; "
+            f"this format cannot be migrated in place — re-initialize the "
+            f"merge state (PulseFabric.init_merge()) instead of restoring "
+            f"it"
+        )
+    return None
+
+
+def restore(base: str, step: int, target: Any, *, shardings: Any = None,
+            strict: bool = True) -> Any:
     """Restore into the structure of ``target`` (arrays or ShapeDtypeStructs).
 
     ``shardings`` (optional, same tree) places each leaf onto the current
     mesh — elastic reshard-on-load.
+
+    ``strict`` (default) also rejects checkpoints whose manifest carries
+    leaves the target does not request — a silent structural mismatch
+    (e.g. a stale pre-refactor state format) would otherwise restore a
+    subset and drop the rest without a trace.  Pass ``strict=False`` to
+    deliberately restore a sub-tree.
     """
     d = step_dir(base, step)
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
     items, treedef = _flatten_with_paths(target)
+    if strict:
+        extra = sorted(set(manifest["leaves"]) - {k for k, _ in items})
+        if extra:
+            hints = [h for h in (_stale_merge_hint(k, manifest["leaves"])
+                                 for k, _ in items) if h]
+            raise ValueError(
+                f"checkpoint at {d} carries leaves the target does not: "
+                f"{extra}" + ("; " + hints[0] if hints else
+                              " (stale state format? pass strict=False to "
+                              "restore a sub-tree deliberately)"))
     shard_leaves = (
         jax.tree.leaves(shardings, is_leaf=lambda s: s is None or hasattr(s, "spec"))
         if shardings is not None else [None] * len(items)
@@ -145,6 +186,9 @@ def restore(base: str, step: int, target: Any, *, shardings: Any = None) -> Any:
     for (key, leaf), shd in zip(items, shard_leaves):
         meta = manifest["leaves"].get(key)
         if meta is None:
+            hint = _stale_merge_hint(key, manifest["leaves"])
+            if hint:
+                raise ValueError(hint)
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = _decode_array(np.load(os.path.join(d, meta["file"])),
                             meta["dtype"])

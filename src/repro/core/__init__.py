@@ -18,6 +18,7 @@ from repro.core import (
     flowcontrol,
     merge,
     routing,
+    topology,
     transport,
 )
 from repro.core.fabric import (
@@ -25,6 +26,15 @@ from repro.core.fabric import (
     FlowControlConfig,
     PulseFabric,
     register_transport,
+)
+from repro.core.topology import (
+    RoutedTransport,
+    Topology,
+    direct,
+    ring,
+    switch_tree,
+    torus2d,
+    torus3d,
 )
 from repro.core.pulse_comm import (
     CommStats,
@@ -42,6 +52,7 @@ __all__ = [
     "flowcontrol",
     "merge",
     "routing",
+    "topology",
     "transport",
     "CommStats",
     "Delivered",
@@ -49,7 +60,14 @@ __all__ = [
     "FlowControlConfig",
     "PulseCommConfig",
     "PulseFabric",
+    "RoutedTransport",
+    "Topology",
     "register_transport",
     "comm_step",
     "multi_chip_step",
+    "direct",
+    "ring",
+    "switch_tree",
+    "torus2d",
+    "torus3d",
 ]

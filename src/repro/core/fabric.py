@@ -26,11 +26,20 @@ New transports register via :func:`register_transport`.
 The NHTL-Extoll credit protocol (``repro.core.flowcontrol``, paper §2.1) is
 wired in as an optional back-pressure stage: with a
 :class:`FlowControlConfig`, credits gate how many packed buckets a chip may
-inject into the network per step.  Buckets without credits are withheld at
-the source and their events dropped *with explicit accounting* in
-``CommStats.stalled`` (the same drop-and-account model as bucket overflow;
-a retransmit queue is future work), and the consumer side returns
-``drain_rate`` credits per step.
+inject into the network per step, and the consumer side returns
+``drain_rate`` credits per step.  Buckets without credits are withheld at
+the source; with ``retransmit_depth > 0`` their events wait in a bounded
+send queue and are re-offered next step (only queue overflow drops, into
+``CommStats.stalled``), otherwise they are dropped *with explicit
+accounting* in ``stalled`` (the same drop-and-account model as bucket
+overflow).
+
+The network itself defaults to a dense crossbar, but any
+:class:`repro.core.topology.Topology` (ring / torus / switch tree) can be
+passed as the transport: the wire-word slabs are then forwarded hop by hop
+through the modeled switched fabric, per-link occupancy lands in
+``CommStats.link_words`` / ``link_backlog`` and the modeled path latency
+shifts the on-wire deadlines.
 """
 
 from __future__ import annotations
@@ -48,6 +57,7 @@ from repro.core import flowcontrol as fc
 from repro.core import merge as mg
 from repro.core import pulse_comm as pc
 from repro.core import routing as rt
+from repro.core import topology as tpo
 from repro.core import transport as tp
 
 # Axis name used by the internal vmap of the local path.  Deliberately
@@ -59,12 +69,24 @@ LOCAL_AXIS = "_pulse_fabric_chip"
 class FlowControlConfig:
     """Credit-based back-pressure at the injection point (paper §2.1).
 
-    capacity   — ring-buffer slots at the consumer == max packets in flight;
-    drain_rate — packets the consumer retires (credits returned) per step.
+    capacity        — ring-buffer slots at the consumer == max packets in
+                      flight;
+    drain_rate      — packets the consumer retires (credits returned) per
+                      step;
+    retransmit_depth — when > 0, credit-stalled events are held in a
+                      bounded per-chip send queue and re-offered to the
+                      routing/aggregation stage next step (the real NHTL
+                      producer's send queue) instead of being dropped.
+                      Only queue overflow beyond this depth drops into
+                      ``CommStats.stalled``, so conservation
+                      ``injected == delivered + queued + stalled_dropped``
+                      holds (property-pinned in tests/test_fabric.py).
+                      0 keeps the historical drop-and-account behavior.
     """
 
     capacity: int = 8
     drain_rate: int = 2
+    retransmit_depth: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +146,18 @@ def _resolve(
                 f"{available_transports()}"
             ) from None
         return factory(cfg)
+    if isinstance(spec, tpo.Topology):
+        # A network topology: route the wire-word slabs hop by hop on the
+        # local path (same internal-vmap axis as transport="local", so
+        # local ≡ shard_map stays bitwise).  For shard_map use, pass
+        # ``topology.transport(axis="chip")`` (an instance) instead.
+        if spec.n_chips != cfg.n_chips:
+            raise ValueError(
+                f"topology has {spec.n_chips} chips, config {cfg.n_chips}")
+        return TransportBinding(
+            tpo.RoutedTransport(topology=spec, axis=LOCAL_AXIS),
+            batched=True,
+        )
     if isinstance(spec, tuple) and all(isinstance(a, str) for a in spec):
         # Tuple of mesh-axis names: hierarchical shard_map exchange
         # (innermost axis first — pod-local links, then cross-pod).
@@ -139,8 +173,10 @@ class FabricResult(NamedTuple):
     """What one fabric step returns.
 
     ``flow`` is None when flow control is off; ``merge`` is None unless the
-    stateful merge stage is active (mode="full" with merge_rate > 0).  Both
-    are carries: thread them into the next :meth:`PulseFabric.step`.
+    stateful merge stage is active (mode="full" with merge_rate > 0);
+    ``sendq`` is None unless the flow config enables the bounded
+    retransmit queue (``retransmit_depth > 0``).  All three are carries:
+    thread them into the next :meth:`PulseFabric.step`.
     """
 
     ring: dl.DelayRing
@@ -148,6 +184,7 @@ class FabricResult(NamedTuple):
     stats: pc.CommStats
     flow: fc.RingState | None
     merge: mg.MergeBuffer | None = None
+    sendq: fc.SendQueue | None = None
 
 
 class PulseFabric:
@@ -173,6 +210,19 @@ class PulseFabric:
         self.cfg = cfg
         self.flow = flow
         self._binding = _resolve(cfg, transport)
+        max_lat = int(getattr(self._binding.transport,
+                              "max_path_latency", 0))
+        if max_lat >= ev.TIME_MOD // 2:
+            # The routed transport shifts the 8-bit on-wire timestamp by
+            # the path latency.  Admitted words carry a deadline strictly
+            # inside the future half-window (diff < 128); a shift below
+            # 128 keeps diff + latency under 256, so an over-delayed word
+            # wraps onto a *negative* difference and is counted expired at
+            # deposit — it can never alias onto a future deadline.
+            raise ValueError(
+                f"transport path latency {max_lat} reaches the 8-bit wrap "
+                f"half-window ({ev.TIME_MOD // 2}); a delivered word could "
+                "alias onto a future deadline")
 
     @property
     def transport(self) -> tp.Transport:
@@ -218,19 +268,93 @@ class PulseFabric:
             )
         return buf
 
+    # -- retransmit send queue ---------------------------------------------
+
+    @property
+    def sendq_enabled(self) -> bool:
+        """True when credit-stalled events are queued for retransmission
+        instead of dropped (flow control with retransmit_depth > 0)."""
+        return self.flow is not None and self.flow.retransmit_depth > 0
+
+    def init_sendq(self) -> fc.SendQueue | None:
+        """Fresh (empty) retransmit queue per chip — batched over chips on
+        the local path.  None when the retransmit queue is disabled."""
+        if not self.sendq_enabled:
+            return None
+        q = fc.sendq_init(self.flow.retransmit_depth)
+        if self.batched:
+            q = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.cfg.n_chips,) + x.shape),
+                q,
+            )
+        return q
+
+    def _requeue(
+        self, routed: rt.RoutedEvents, sendq: fc.SendQueue, now: jax.Array
+    ) -> rt.RoutedEvents:
+        """Re-offer queued events ahead of this step's fresh stream (age
+        priority for bucket slots).  Queued words carry the 8-bit on-wire
+        timestamp; the full deadline is reconstructed against the ring
+        clock, so a word that expired while stalled fails the injection
+        window next and drops into ``expired`` — a queued word is re-judged
+        every step and can never age across the wrap unnoticed."""
+        q_addr, _, q_valid = ev.decode_word(sendq.words)
+        q_valid = q_valid & (sendq.dest >= 0)
+        q_deadline = ev.word_deadline(sendq.words, now)
+        cat = lambda q, r: jnp.concatenate([q, r])
+        return rt.RoutedEvents(
+            dest_chip=cat(jnp.where(q_valid, sendq.dest, 0),
+                          routed.dest_chip),
+            dest_addr=cat(q_addr, routed.dest_addr),
+            deadline=cat(q_deadline, routed.deadline),
+            valid=cat(q_valid, routed.valid),
+        )
+
     def _gate(
-        self, flow: fc.RingState, packed: bk.PackedBuckets
-    ) -> tuple[fc.RingState, bk.PackedBuckets, jax.Array]:
+        self,
+        flow: fc.RingState,
+        packed: bk.PackedBuckets,
+    ) -> tuple[fc.RingState, bk.PackedBuckets, jax.Array,
+               fc.SendQueue | None]:
         """Credit gate: inject only as many non-empty buckets as credits
-        allow (lowest bucket index first).  Withheld buckets are dropped at
-        the source and counted in ``stalled`` — accounted loss, not a
-        retransmit queue (events are NOT re-offered next step)."""
+        allow (lowest bucket index first).  Withheld buckets are pulled off
+        the wire; without a retransmit queue their events are dropped at
+        the source and counted in ``stalled``.  With
+        ``retransmit_depth > 0`` they refill the send queue instead (FIFO
+        over bucket-major lane order) and only the overflow beyond the
+        queue depth drops into ``stalled``."""
+        cfg = self.cfg
         ready = packed.counts > 0
         n_ready = jnp.sum(ready.astype(jnp.int32))
         flow, accepted = fc.produce(flow, n_ready)
         rank = jnp.cumsum(ready.astype(jnp.int32)) - ready.astype(jnp.int32)
         inject = ready & (rank < accepted)
-        stalled = jnp.sum(packed.valid & ~inject[:, None]).astype(jnp.int32)
+        withheld = packed.valid & ~inject[:, None]
+
+        sendq = None
+        if self.sendq_enabled:
+            depth = self.flow.retransmit_depth
+            w_words = jnp.where(withheld, packed.words,
+                                jnp.int32(ev.WORD_SENTINEL)).reshape(-1)
+            # The word carries only the destination input row; recover the
+            # destination chip from the bucket's static binding.
+            w_dest = jnp.broadcast_to(
+                (jnp.arange(cfg.n_buckets, dtype=jnp.int32)
+                 // cfg.buckets_per_chip)[:, None],
+                (cfg.n_buckets, cfg.bucket_capacity)).reshape(-1)
+            held = w_words >= 0
+            order = jnp.argsort(~held, stable=True)   # held lanes first
+            pad = (jnp.full((depth,), ev.WORD_SENTINEL, jnp.int32),
+                   jnp.full((depth,), -1, jnp.int32))
+            q_words = jnp.concatenate([w_words[order], pad[0]])[:depth]
+            q_dest = jnp.concatenate([w_dest[order], pad[1]])[:depth]
+            q_dest = jnp.where(q_words >= 0, q_dest, -1)
+            sendq = fc.SendQueue(words=q_words, dest=q_dest)
+            n_withheld = jnp.sum(held.astype(jnp.int32))
+            stalled = jnp.maximum(n_withheld - depth, 0).astype(jnp.int32)
+        else:
+            stalled = jnp.sum(withheld).astype(jnp.int32)
+
         packed = packed._replace(
             words=jnp.where(inject[:, None], packed.words,
                             jnp.int32(ev.WORD_SENTINEL)),
@@ -240,7 +364,7 @@ class PulseFabric:
         # next step (notification conservation is property-tested in
         # tests/test_flowcontrol.py).
         flow, _ = fc.consume(flow, self.flow.drain_rate)
-        return flow, packed, stalled
+        return flow, packed, stalled, sendq
 
     # -- the single step body ----------------------------------------------
 
@@ -251,10 +375,19 @@ class PulseFabric:
         ring: dl.DelayRing,
         flow: fc.RingState | None,
         merge: mg.MergeBuffer | None,
+        sendq: fc.SendQueue | None,
     ) -> tuple[dl.DelayRing, pc.Delivered, pc.CommStats,
-               fc.RingState | None, mg.MergeBuffer | None]:
+               fc.RingState | None, mg.MergeBuffer | None,
+               fc.SendQueue | None]:
         cfg = self.cfg
         routed = rt.route(events, table)
+        # ``sent`` counts this step's fresh stream only — a queued event
+        # was counted when first offered, so run-level conservation reads
+        #   Σ sent == ring + expired + overflow + merge_dropped + stalled
+        #             + final queue occupancies.
+        sent = jnp.sum(routed.valid.astype(jnp.int32))
+        if self.sendq_enabled:
+            routed = self._requeue(routed, sendq, ring.now)
         # Enforce the 8-bit wrap contract at the injection boundary: only
         # deadlines strictly inside the future half-window (0 < diff < 128)
         # ride the wire word.  Later deadlines would alias onto near ones
@@ -268,15 +401,14 @@ class PulseFabric:
         diff = routed.deadline - ring.now
         in_window = (diff > 0) & (diff < ev.TIME_MOD // 2)
         wrap_expired = jnp.sum(routed.valid & ~in_window).astype(jnp.int32)
-        sent = jnp.sum(routed.valid.astype(jnp.int32))
         routed = routed._replace(valid=routed.valid & in_window)
         packed, traffic = pc.aggregate(cfg, routed)
 
         stalled = jnp.int32(0)
         if self.flow is not None:
-            flow, packed, stalled = self._gate(flow, packed)
+            flow, packed, stalled, sendq = self._gate(flow, packed)
 
-        delivered = pc.exchange(cfg, self.transport, packed)
+        delivered, link = pc.exchange_with_stats(cfg, self.transport, packed)
 
         merge_dropped = jnp.int32(0)
         if cfg.mode == "full":
@@ -312,8 +444,10 @@ class PulseFabric:
             utilization=packed.utilization(),
             wire_bytes=wire.astype(jnp.int32),
             traffic=traffic,
+            link_words=link.words,
+            link_backlog=link.backlog,
         )
-        return new_ring, delivered, stats, flow, merge
+        return new_ring, delivered, stats, flow, merge, sendq
 
     # -- public API ---------------------------------------------------------
 
@@ -324,6 +458,7 @@ class PulseFabric:
         ring: dl.DelayRing,
         flow: fc.RingState | None = None,
         merge: mg.MergeBuffer | None = None,
+        sendq: fc.SendQueue | None = None,
     ) -> FabricResult:
         """One pulse-communication step.
 
@@ -331,22 +466,26 @@ class PulseFabric:
         ``ring [n_chips, D, n_inputs]``.  Shard path: the same without the
         leading chip axis (call inside shard_map over the mesh axis).
 
-        ``flow`` threads the credit state when flow control is configured
-        and ``merge`` the persistent merge queue when the stateful merge
-        stage is active; pass the previous step's ``FabricResult.flow`` /
-        ``FabricResult.merge`` (auto-initialized on first use if omitted).
+        ``flow`` threads the credit state when flow control is configured,
+        ``merge`` the persistent merge queue when the stateful merge stage
+        is active and ``sendq`` the retransmit queue when
+        ``flow.retransmit_depth > 0``; pass the previous step's
+        ``FabricResult.flow`` / ``.merge`` / ``.sendq`` (auto-initialized
+        on first use if omitted).
         """
         if self.flow is not None and flow is None:
             flow = self.init_flow()
         if self.merge_enabled and merge is None:
             merge = self.init_merge()
+        if self.sendq_enabled and sendq is None:
+            sendq = self.init_sendq()
         if self.batched:
-            ring, delivered, stats, flow, merge = jax.vmap(
+            ring, delivered, stats, flow, merge, sendq = jax.vmap(
                 self._chip_step, axis_name=LOCAL_AXIS
-            )(events, table, ring, flow, merge)
+            )(events, table, ring, flow, merge, sendq)
         else:
-            ring, delivered, stats, flow, merge = self._chip_step(
-                events, table, ring, flow, merge
+            ring, delivered, stats, flow, merge, sendq = self._chip_step(
+                events, table, ring, flow, merge, sendq
             )
         return FabricResult(ring=ring, delivered=delivered, stats=stats,
-                            flow=flow, merge=merge)
+                            flow=flow, merge=merge, sendq=sendq)

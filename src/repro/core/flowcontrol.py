@@ -70,6 +70,33 @@ def consume(state: RingState, n: jax.Array) -> tuple[RingState, jax.Array]:
     )
 
 
+class SendQueue(NamedTuple):
+    """Bounded retransmit queue at the injection point.
+
+    Credit-stalled events wait here and are re-offered to the routing/
+    aggregation stage next step instead of being dropped (the real NHTL
+    producer keeps rejected writes in its send queue under back-pressure).
+    Entries are packed wire words plus the destination chip the bucket was
+    bound to (the word itself carries only the destination *input row*);
+    empty slots hold the word sentinel / -1.
+    """
+
+    words: jax.Array   # int32[depth] packed wire words
+    dest: jax.Array    # int32[depth] destination chip (-1 = empty)
+
+    @property
+    def depth(self) -> int:
+        return self.words.shape[-1]
+
+    def occupancy(self) -> jax.Array:
+        return jnp.sum((self.words >= 0).astype(jnp.int32), axis=-1)
+
+
+def sendq_init(depth: int) -> SendQueue:
+    return SendQueue(words=jnp.full((depth,), -1, jnp.int32),
+                     dest=jnp.full((depth,), -1, jnp.int32))
+
+
 def slot_indices(
     state: RingState,
     width: int,

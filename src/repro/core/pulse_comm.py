@@ -107,16 +107,27 @@ class PulseCommConfig:
 
 
 class CommStats(NamedTuple):
-    """Per-step accounting (all per-chip; aggregate over chips upstream)."""
+    """Per-step accounting (all per-chip; aggregate over chips upstream).
+
+    ``link_words`` / ``link_backlog`` are indexed by this chip's network
+    port (``[n_ports]``): words the chip drove over each port this step,
+    and the words in excess of the modeled per-link capacity.  Dense
+    transports expose a single "net" port (off-chip words, zero backlog);
+    a :class:`repro.core.topology.RoutedTransport` reports its topology's
+    ports (torus ±dim links / tree up-down links) including transit
+    traffic the chip forwards on behalf of others.
+    """
 
     sent: jax.Array          # valid events offered to the network
     overflow: jax.Array      # dropped at bucket packing (congestion)
     merge_dropped: jax.Array  # dropped at merge buffer (full mode)
     expired: jax.Array       # dropped at deposit (deadline passed/too far)
-    stalled: jax.Array       # held at the source by the credit gate
+    stalled: jax.Array       # dropped at the source by the credit gate
     utilization: jax.Array   # mean bucket fill fraction
     wire_bytes: jax.Array    # header + payload bytes injected
     traffic: jax.Array       # [n_chips] events by destination chip
+    link_words: jax.Array    # [n_ports] words driven per network port
+    link_backlog: jax.Array  # [n_ports] words beyond per-link capacity
 
 
 class Delivered(NamedTuple):
@@ -178,21 +189,49 @@ def aggregate(cfg: PulseCommConfig, routed: rt.RoutedEvents) -> tuple[bk.PackedB
     return packed, traffic
 
 
+class LinkStats(NamedTuple):
+    """Per-port link accounting for one exchange (see ``CommStats``)."""
+
+    words: jax.Array     # int32[n_ports]
+    backlog: jax.Array   # int32[n_ports]
+
+
+def exchange_with_stats(
+    cfg: PulseCommConfig, transport: tp.Transport, packed: bk.PackedBuckets
+) -> tuple[Delivered, LinkStats]:
+    """Stage 3: route packets to their destination chips.
+
+    On a dense transport this is ONE ``all_to_all`` on the packed word slab
+    — the single collective of the whole step (previously three: addr,
+    deadline and valid each crossed the interconnect separately) — and the
+    link stats are a single "net" port carrying the off-chip words.  A
+    transport exposing ``exchange_words`` (a routed topology) instead
+    forwards the slab hop by hop and reports its own per-port counts.  The
+    slab is laid out [n_chips, buckets_per_chip, C] so the exchange
+    delivers slab *d* of every source to chip *d*; afterwards the leading
+    axis indexes the *source* chip.
+    """
+    shape = (cfg.n_chips, cfg.buckets_per_chip, cfg.bucket_capacity)
+    slab = packed.words.reshape(shape)
+    if hasattr(transport, "exchange_words"):
+        words, link_words, link_backlog = transport.exchange_words(slab)
+    else:
+        words = transport.all_to_all(slab)
+        own = jnp.take(slab, transport.chip_index(), axis=0)
+        off_chip = (jnp.sum(ev.word_valid(slab).astype(jnp.int32))
+                    - jnp.sum(ev.word_valid(own).astype(jnp.int32)))
+        link_words = off_chip[None]
+        link_backlog = jnp.zeros((1,), jnp.int32)
+    return (Delivered(words=words.reshape(cfg.lanes_in)),
+            LinkStats(words=link_words, backlog=link_backlog))
+
+
 def exchange(
     cfg: PulseCommConfig, transport: tp.Transport, packed: bk.PackedBuckets
 ) -> Delivered:
-    """Stage 3: route packets to their destination chips.
-
-    ONE ``all_to_all`` on the packed word slab — the single collective of
-    the whole step (previously three: addr, deadline and valid each crossed
-    the interconnect separately).  The slab is laid out
-    [n_chips, buckets_per_chip, C] so that all_to_all delivers slab *d* of
-    every source to chip *d*; after the exchange the leading axis indexes
-    the *source* chip.
-    """
-    shape = (cfg.n_chips, cfg.buckets_per_chip, cfg.bucket_capacity)
-    words = transport.all_to_all(packed.words.reshape(shape))
-    return Delivered(words=words.reshape(cfg.lanes_in))
+    """Stage 3 without the link accounting — see
+    :func:`exchange_with_stats` (which the fabric uses)."""
+    return exchange_with_stats(cfg, transport, packed)[0]
 
 
 def merge_delivered(

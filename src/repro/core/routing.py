@@ -137,7 +137,60 @@ def from_connection_list(
     ``connections`` rows: (src_addr, dest_chip, dest_addr[, delay]).
     Rows beyond ``max_fanout`` per source are rejected with ValueError —
     the BSS-2 LUT has a fixed fan-out budget per source address.
+
+    Vectorized (bincount for fan-outs, one stable sort + a searchsorted
+    prefix for each row's slot within its source); results are pinned
+    bitwise against the retained per-row loop builder
+    (:func:`_from_connection_list_loops`) in tests/test_routing.py.
     """
+    connections = np.asarray(connections)
+    if connections.ndim != 2 or connections.shape[1] not in (3, 4):
+        raise ValueError("connections must be [n, 3|4]")
+    src = connections[:, 0].astype(np.int64) if len(connections) else \
+        np.zeros((0,), np.int64)
+    counts = np.bincount(src, minlength=n_neurons)
+    fanout = max(int(counts.max()) if len(connections) else 1, 1)
+    if max_fanout is not None:
+        if fanout > max_fanout:
+            raise ValueError(
+                f"source fan-out {fanout} exceeds LUT budget {max_fanout}"
+            )
+        fanout = max_fanout
+    dest_chip = np.zeros((n_neurons, fanout), dtype=np.int32)
+    dest_addr = np.full((n_neurons, fanout), ev.ADDR_SENTINEL, dtype=np.int32)
+    delay = np.full((n_neurons, fanout), default_delay, dtype=np.int32)
+    valid = np.zeros((n_neurons, fanout), dtype=bool)
+    if len(connections):
+        # Slot of each row within its source = rank in connection order:
+        # stable-sort rows by source, subtract each source segment's start.
+        order = np.argsort(src, kind="stable")
+        ssrc = src[order]
+        rank_sorted = np.arange(len(src)) - np.searchsorted(ssrc, ssrc,
+                                                            side="left")
+        slot = np.empty(len(src), np.int64)
+        slot[order] = rank_sorted
+        dest_chip[src, slot] = connections[:, 1].astype(np.int32)
+        dest_addr[src, slot] = connections[:, 2].astype(np.int32)
+        if connections.shape[1] == 4:
+            delay[src, slot] = connections[:, 3].astype(np.int32)
+        valid[src, slot] = True
+    return RoutingTable(
+        dest_chip=jnp.asarray(dest_chip),
+        dest_addr=jnp.asarray(dest_addr),
+        delay=jnp.asarray(delay),
+        valid=jnp.asarray(valid),
+    )
+
+
+def _from_connection_list_loops(
+    connections: np.ndarray,
+    n_neurons: int,
+    *,
+    max_fanout: int | None = None,
+    default_delay: int = 1,
+) -> RoutingTable:
+    """The original per-row loop builder, kept as the regression oracle for
+    the vectorized :func:`from_connection_list`."""
     connections = np.asarray(connections)
     if connections.ndim != 2 or connections.shape[1] not in (3, 4):
         raise ValueError("connections must be [n, 3|4]")

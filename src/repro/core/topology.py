@@ -1,0 +1,548 @@
+"""Switched network topology: the EXTOLL fabric as a graph, compiled to
+routes and lowered onto JAX collectives.
+
+The paper's transport is not a dense crossbar: EXTOLL/Tourmalet routes pulse
+packets hop-by-hop through a switched network — 3D-torus links with
+dimension-ordered routing and per-link credit flow control (paper §2.1) —
+and the follow-up scheme [Thommes et al. 2021, arXiv:2111.15296] scales it
+through switch hierarchies (chips → FPGA → Tourmalet switch).  This module
+models that stack as
+
+    graph  →  route compile  →  hop schedule  →  collectives
+
+* :class:`Topology` describes the graph: ``direct`` (single crossbar — the
+  dense exchange the fabric used so far), ``ring`` / ``torus2d`` /
+  ``torus3d`` (wrap-around grids, one ±port pair per dimension) and
+  ``switch_tree`` (chips behind per-group FPGAs behind one Tourmalet
+  switch), each with per-link latency (steps per hop), bandwidth
+  (words/step/link) and credit parameters.
+* :func:`compile_routes` turns a topology into static forwarding state:
+  per-hop next-chip/port tables (dimension-ordered for tori, up/down port
+  sequences for the tree) plus hop-count and path-latency matrices.
+* :class:`RoutedTransport` implements the
+  :class:`repro.core.transport.Transport` protocol by forwarding the packed
+  wire-word slabs hop by hop — ``ppermute`` neighbor exchanges following
+  the forwarding tables for torus links; the FPGA/switch crossbar stages
+  are grouped exchanges — instead of one dense ``all_to_all``.  Delivery
+  contents are bitwise-equal to the dense exchange (property-pinned in
+  tests/test_topology.py); the modeled path latency is added onto the
+  8-bit on-wire timestamp so arrival deadlines reflect the network, and
+  per-port word counts / backlog are surfaced into ``CommStats`` via
+  :func:`repro.core.pulse_comm.exchange_with_stats`.
+
+Like :class:`repro.core.transport.ShardMapTransport`, a ``RoutedTransport``
+runs both inside ``shard_map`` (real ICI collectives) and under the
+fabric's internal vmap with a named axis (single-device "local" path) —
+``PulseFabric(cfg, transport=Topology(...))`` binds the latter, so local
+and shard_map execution stay bitwise identical by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events as ev
+from repro.core import transport as tp
+
+# Port indices of the switch_tree (per chip, "contribution" accounting: up
+# ports count words this chip injects toward its FPGA/switch, down ports
+# words delivered to this chip from them).
+TREE_UP_CHIP = 0      # chip → FPGA uplink
+TREE_DOWN_CHIP = 1    # FPGA → chip downlink
+TREE_UP_TRUNK = 2     # this chip's share of the FPGA → switch trunk
+TREE_DOWN_TRUNK = 3   # this chip's share of the switch → FPGA trunk
+
+_KINDS = ("direct", "torus", "switch_tree")
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A switched pulse-communication network over ``n_chips`` endpoints.
+
+    ``link_latency``   — modeled steps per physical hop (chip↔chip torus
+                         link, or chip↔FPGA leaf link of the tree);
+    ``trunk_latency``  — steps per FPGA↔switch hop (tree only);
+    ``link_bandwidth`` — words a link carries per step (0 = unbounded);
+    ``link_credits``   — per-link credit budget: words that may be in
+                         flight (unacknowledged) on a link within a step
+                         (0 = unbounded).  With the single-step round trips
+                         modeled here this acts as a second per-round cap;
+                         the effective capacity is the min of both, and
+                         excess words are reported as ``link_backlog``
+                         (congestion is *observed*, never silently drops
+                         events — contents stay bitwise-equal to the dense
+                         exchange).
+
+    Use the module-level constructors (:func:`direct`, :func:`ring`,
+    :func:`torus2d`, :func:`torus3d`, :func:`switch_tree`) rather than
+    instantiating directly.
+    """
+
+    kind: str
+    n_chips: int
+    dims: tuple[int, ...] = ()        # torus grid (row-major, dim 0 outer)
+    chips_per_group: int = 0          # switch_tree: chips behind one FPGA
+    link_latency: int = 1
+    trunk_latency: int = 1
+    link_bandwidth: int = 0
+    link_credits: int = 0
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown topology kind {self.kind!r}")
+        if self.n_chips < 1:
+            raise ValueError("n_chips must be >= 1")
+        if self.kind == "torus":
+            if not self.dims or any(k < 1 for k in self.dims):
+                raise ValueError("torus needs positive dims")
+            if int(np.prod(self.dims)) != self.n_chips:
+                raise ValueError(
+                    f"dims {self.dims} do not tile n_chips={self.n_chips}")
+        if self.kind == "switch_tree":
+            m = self.chips_per_group
+            if m < 1 or self.n_chips % m:
+                raise ValueError(
+                    f"chips_per_group {m} does not divide "
+                    f"n_chips={self.n_chips}")
+        if self.link_latency < 0 or self.trunk_latency < 0:
+            raise ValueError("latencies must be >= 0")
+
+    @property
+    def n_groups(self) -> int:
+        if self.kind != "switch_tree":
+            raise ValueError(
+                f"n_groups is only defined for switch_tree topologies, "
+                f"not {self.kind!r}")
+        return self.n_chips // self.chips_per_group
+
+    @property
+    def n_ports(self) -> int:
+        """Ports per chip — the leading dim of the per-chip link stats."""
+        if self.kind == "direct":
+            return 1
+        if self.kind == "torus":
+            return 2 * len(self.dims)
+        return 4
+
+    @property
+    def port_names(self) -> tuple[str, ...]:
+        if self.kind == "direct":
+            return ("net",)
+        if self.kind == "torus":
+            return tuple(
+                f"dim{i}{s}" for i in range(len(self.dims)) for s in "+-")
+        return ("up_chip", "down_chip", "up_trunk", "down_trunk")
+
+    @property
+    def link_capacity(self) -> int:
+        """Effective words/step/link cap (0 = unbounded): the tighter of
+        bandwidth and credits."""
+        caps = [c for c in (self.link_bandwidth, self.link_credits) if c > 0]
+        return min(caps) if caps else 0
+
+    def transport(self, axis: str) -> "RoutedTransport":
+        """A RoutedTransport over mesh axis ``axis`` (shard_map use; the
+        fabric binds the local-vmap axis itself when handed a Topology)."""
+        return RoutedTransport(topology=self, axis=axis)
+
+
+def direct(n_chips: int, *, link_latency: int = 1, link_bandwidth: int = 0,
+           link_credits: int = 0) -> Topology:
+    """Single crossbar: every chip one hop from every other — the dense
+    all_to_all the fabric has used so far, now with modeled link params."""
+    return Topology(kind="direct", n_chips=n_chips, link_latency=link_latency,
+                    link_bandwidth=link_bandwidth, link_credits=link_credits)
+
+
+def ring(n_chips: int, **link) -> Topology:
+    """Bidirectional ring (a 1-D torus)."""
+    return Topology(kind="torus", n_chips=n_chips, dims=(n_chips,), **link)
+
+
+def torus2d(nx: int, ny: int, **link) -> Topology:
+    return Topology(kind="torus", n_chips=nx * ny, dims=(nx, ny), **link)
+
+
+def torus3d(nx: int, ny: int, nz: int, **link) -> Topology:
+    """The EXTOLL Tourmalet native fabric: a 3-D wrap-around grid."""
+    return Topology(kind="torus", n_chips=nx * ny * nz, dims=(nx, ny, nz),
+                    **link)
+
+
+def switch_tree(n_groups: int, chips_per_group: int, *, link_latency: int = 1,
+                trunk_latency: int = 1, link_bandwidth: int = 0,
+                link_credits: int = 0) -> Topology:
+    """The paper's physical stack: ``chips_per_group`` chips behind one FPGA,
+    ``n_groups`` FPGAs behind one Tourmalet switch.  Up/down routing: same
+    group = chip→FPGA→chip (2 leaf hops), cross group = chip→FPGA→switch→
+    FPGA→chip (2 leaf + 2 trunk hops)."""
+    return Topology(kind="switch_tree", n_chips=n_groups * chips_per_group,
+                    chips_per_group=chips_per_group,
+                    link_latency=link_latency, trunk_latency=trunk_latency,
+                    link_bandwidth=link_bandwidth, link_credits=link_credits)
+
+
+# ---------------------------------------------------------------------------
+# Route compiler
+# ---------------------------------------------------------------------------
+
+class RoutePlan(NamedTuple):
+    """Static routing state compiled from a :class:`Topology` (all numpy).
+
+    port    : int32[n, n]  egress port at chip c for traffic toward d
+                           (-1 when c == d)
+    next    : int32[n, n]  next chip on the c→d route (c when c == d; for
+                           the switch_tree the next *chip* is d itself —
+                           the intermediate FPGA/switch nodes are not
+                           endpoints, their traversal is captured by the
+                           port sequence and hop/latency counts)
+    hops    : int32[n, n]  physical links traversed c→d
+    latency : int32[n, n]  modeled steps c→d (hop latencies summed)
+    coords  : int32[n, k]  torus grid coordinates (k = len(dims); a single
+                           zero column for non-torus kinds)
+    """
+
+    port: np.ndarray
+    next: np.ndarray
+    hops: np.ndarray
+    latency: np.ndarray
+    coords: np.ndarray
+
+
+@functools.lru_cache(maxsize=None)
+def compile_routes(topo: Topology) -> RoutePlan:
+    """Compile the static forwarding tables: dimension-ordered routing for
+    tori (dim 0 corrected first, shorter ring direction, ties broken
+    forward), up/down routing for the switch tree."""
+    n = topo.n_chips
+    i32 = np.int32
+    port = np.full((n, n), -1, i32)
+    nxt = np.tile(np.arange(n, dtype=i32), (n, 1))
+    hops = np.zeros((n, n), i32)
+    lat = np.zeros((n, n), i32)
+
+    if topo.kind == "direct":
+        off = ~np.eye(n, dtype=bool)
+        port[off] = 0
+        hops[off] = 1
+        lat[off] = topo.link_latency
+        coords = np.zeros((n, 1), i32)
+    elif topo.kind == "switch_tree":
+        m = topo.chips_per_group
+        grp = np.arange(n) // m
+        off = ~np.eye(n, dtype=bool)
+        cross = (grp[:, None] != grp[None, :])
+        port[off] = TREE_UP_CHIP        # first hop is always chip → FPGA
+        hops[off] = 2
+        hops[cross] = 4
+        lat[off] = 2 * topo.link_latency
+        lat[cross] = 2 * topo.link_latency + 2 * topo.trunk_latency
+        coords = np.stack([grp, np.arange(n) % m], axis=1).astype(i32)
+    else:  # torus — all pairwise tables vectorized over [n, n, ndims]
+        dims = np.asarray(topo.dims)
+        coords = np.stack(
+            np.unravel_index(np.arange(n), topo.dims), axis=1).astype(i32)
+        delta = (coords[None, :, :] - coords[:, None, :]) % dims
+        hops = np.minimum(delta, dims - delta).sum(axis=2).astype(i32)
+        lat = (hops * topo.link_latency).astype(i32)
+        # First differing dim (dimension order), shorter ring direction,
+        # ties (delta == k/2 on even rings) broken forward.
+        first = np.argmax(delta != 0, axis=2)
+        d1 = np.take_along_axis(delta, first[:, :, None], axis=2)[:, :, 0]
+        k1 = dims[first]
+        fwd = d1 <= k1 // 2
+        stepped = np.broadcast_to(coords[:, None, :], delta.shape).copy()
+        newc = (np.take_along_axis(stepped, first[:, :, None], axis=2)
+                [:, :, 0] + np.where(fwd, 1, -1)) % k1
+        np.put_along_axis(stepped, first[:, :, None], newc[:, :, None],
+                          axis=2)
+        off = hops > 0
+        port = np.where(off, 2 * first + np.where(fwd, 0, 1), -1).astype(i32)
+        nxt = np.where(
+            off,
+            np.ravel_multi_index(tuple(np.moveaxis(stepped, 2, 0)),
+                                 topo.dims),
+            np.arange(n)[:, None]).astype(i32)
+    return RoutePlan(port=port, next=nxt, hops=hops, latency=lat,
+                     coords=coords)
+
+
+def reference_link_words(topo: Topology, traffic: np.ndarray) -> np.ndarray:
+    """Oracle per-chip per-port word counts for a traffic matrix.
+
+    ``traffic[s, d]`` = words source chip s offers for destination d.
+    Returns int64[n_chips, n_ports], counting every physical link a word
+    crosses at the chip that drives (or, for down ports, receives) it —
+    the same attribution :class:`RoutedTransport` reports.  Pure-numpy walk
+    of the compiled forwarding tables; the test suite pins the transport's
+    traced counters against this.
+    """
+    plan = compile_routes(topo)
+    n = topo.n_chips
+    out = np.zeros((n, topo.n_ports), np.int64)
+    for s in range(n):
+        for d in range(n):
+            w = int(traffic[s, d])
+            if s == d or w == 0:
+                continue
+            if topo.kind == "switch_tree":
+                out[s, TREE_UP_CHIP] += w
+                out[d, TREE_DOWN_CHIP] += w
+                if s // topo.chips_per_group != d // topo.chips_per_group:
+                    out[s, TREE_UP_TRUNK] += w
+                    out[d, TREE_DOWN_TRUNK] += w
+            else:
+                c = s
+                while c != d:
+                    out[c, plan.port[c, d]] += w
+                    c = int(plan.next[c, d])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RoutedTransport — the hop schedule lowered onto collectives
+# ---------------------------------------------------------------------------
+
+def _shift_word_time(words: jax.Array, dt: jax.Array) -> jax.Array:
+    """Add ``dt`` steps to the 8-bit on-wire timestamp of every valid word
+    (wrapping inside the time field; address bits untouched, sentinels
+    pass through)."""
+    t = ((words & ev.WORD_TIME_MASK) + dt) & ev.WORD_TIME_MASK
+    return jnp.where(words >= 0, (words & ~ev.WORD_TIME_MASK) | t, words)
+
+
+def _count_words(x: jax.Array) -> jax.Array:
+    return jnp.sum((x >= 0).astype(jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutedTransport:
+    """Transport that moves wire-word slabs through a :class:`Topology`.
+
+    ``all_to_all`` semantics match the dense exchange (input: one slab per
+    destination, output: one slab per source) but the slabs travel the
+    modeled network: torus links are walked hop by hop with one
+    ``ppermute`` per (dimension, direction, round) following the
+    dimension-ordered forwarding tables; the tree's FPGA/switch crossbars
+    are grouped exchanges (members first, then groups — up/down routing).
+    Valid words get the compiled path latency added to their on-wire
+    timestamp (``apply_latency=False`` for raw-data use).
+
+    The slab arrays are interpreted as packed wire words: the all-ones
+    int32 is the "empty lane" sentinel (only non-sentinel words count
+    toward link occupancy, and relay buffers are padded with it).
+
+    ``axis`` is a single mesh-axis name — the topology itself replaces the
+    hierarchical multi-axis mesh tricks of ``ShardMapTransport``.
+    """
+
+    topology: Topology
+    axis: str
+    apply_latency: bool = True
+
+    def __post_init__(self):
+        if not isinstance(self.axis, str):
+            raise TypeError("RoutedTransport takes a single axis name; the "
+                            "topology models the hierarchy")
+
+    @property
+    def n_chips(self) -> int:
+        return self.topology.n_chips
+
+    @property
+    def plan(self) -> RoutePlan:
+        return compile_routes(self.topology)
+
+    @property
+    def max_path_latency(self) -> int:
+        """Worst-case modeled path latency — bounded by the fabric against
+        the 8-bit wrap window."""
+        return int(self.plan.latency.max())
+
+    @property
+    def _inner(self) -> tp.ShardMapTransport:
+        return tp.ShardMapTransport(axis=self.axis, n_chips=self.n_chips)
+
+    # -- Transport protocol -------------------------------------------------
+
+    def all_to_all(self, x: jax.Array) -> jax.Array:
+        return self.exchange_words(x)[0]
+
+    def put(self, x: jax.Array, perm: list[tuple[int, int]]) -> jax.Array:
+        return self._inner.put(x, perm)
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return self._inner.psum(x)
+
+    def chip_index(self) -> jax.Array:
+        return self._inner.chip_index()
+
+    # -- the routed exchange ------------------------------------------------
+
+    def exchange_words(
+        self, x: jax.Array
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Route one destination-indexed word slab through the network.
+
+        ``x``: [n_chips, ...] — slab ``x[d]`` is this chip's traffic for
+        chip d.  Returns ``(y, link_words, link_backlog)`` where ``y[s]``
+        is the slab received from chip s (timestamps shifted by the path
+        latency when ``apply_latency``), ``link_words`` int32[n_ports]
+        counts the words this chip drove over each of its ports and
+        ``link_backlog`` the words in excess of the per-round link capacity
+        (0 when bandwidth/credits are unbounded).
+        """
+        topo = self.topology
+        n = topo.n_chips
+        if x.shape[0] != n:
+            raise ValueError(
+                f"leading dim {x.shape[0]} != n_chips {n}")
+        me = self.chip_index()
+        words = [jnp.int32(0)] * topo.n_ports
+        backlog = [jnp.int32(0)] * topo.n_ports
+
+        if topo.kind == "direct":
+            y = self._inner.all_to_all(x)
+            off = _count_words(x) - _count_words(jnp.take(x, me, axis=0))
+            words[0] = off
+            backlog[0] = self._excess(off)
+        elif topo.kind == "torus":
+            y = self._torus_exchange(x, me, words, backlog)
+        else:
+            y = self._tree_exchange(x, me, words, backlog)
+
+        if self.apply_latency and int(self.plan.latency.max()):
+            dt = jnp.take(jnp.asarray(self.plan.latency, jnp.int32), me,
+                          axis=1)                        # [n] by source
+            y = _shift_word_time(y, dt.reshape((n,) + (1,) * (y.ndim - 1)))
+        return y, jnp.stack(words), jnp.stack(backlog)
+
+    def _excess(self, sent: jax.Array) -> jax.Array:
+        cap = self.topology.link_capacity
+        if not cap:
+            return jnp.int32(0)
+        return jnp.maximum(sent - cap, 0).astype(jnp.int32)
+
+    # -- torus: dimension-ordered hop-by-hop forwarding ---------------------
+
+    def _dim_perm(self, dim: int, delta: int) -> list[tuple[int, int]]:
+        """The flat-axis permutation advancing every chip's coordinate
+        ``dim`` by ``delta`` (all rings of that dimension shift at once)."""
+        dims = self.topology.dims
+        coords = self.plan.coords
+        perm = []
+        for c in range(self.n_chips):
+            stepped = coords[c].copy()
+            stepped[dim] = (stepped[dim] + delta) % dims[dim]
+            perm.append((c, int(np.ravel_multi_index(tuple(stepped), dims))))
+        return perm
+
+    def _torus_exchange(self, x, me, words, backlog):
+        topo = self.topology
+        dims = topo.dims
+        mycoords = jnp.take(jnp.asarray(self.plan.coords), me, axis=0)
+        buf = x.reshape(dims + x.shape[1:])
+        for i, k in enumerate(dims):
+            b = jnp.moveaxis(buf, i, 0)
+            b = self._ring_stage(
+                b, k, self._dim_perm(i, +1), self._dim_perm(i, -1),
+                mycoords[i], words, backlog, 2 * i, 2 * i + 1)
+            buf = jnp.moveaxis(b, 0, i)
+        return buf.reshape(x.shape)
+
+    def _ring_stage(self, buf, k, perm_fwd, perm_bwd, pos, words, backlog,
+                    port_f, port_b, count=True):
+        """Hop-by-hop ring all_to_all over the leading axis (size ``k``).
+
+        ``buf[j]`` is the block destined to ring member j; returns the
+        source-indexed blocks (``out[i]`` = from member i).  Each block
+        travels the shorter ring direction (ties forward), one neighbor
+        ``ppermute`` per round — a store-and-forward relay: in round r the
+        forward stream at any chip holds only blocks injected r hops
+        upstream, so one destination-indexed slot per block never collides
+        (the same argument, mirrored, covers the backward stream).
+        ``count=False`` skips the per-round link counters (used for the
+        tree's crossbar stages, which are billed per word, not per hop).
+        """
+        sent_shape = (k,) + (1,) * (buf.ndim - 1)
+        sel = lambda m: m.reshape(sent_shape)
+        sentinel = jnp.full_like(buf, ev.WORD_SENTINEL)
+        idx = jnp.arange(k)
+        out = jnp.where(sel(idx == pos), jnp.take(buf, pos, axis=0)[None],
+                        sentinel)
+        fwd_span, bwd_span = k // 2, (k - 1) // 2
+
+        for direction, span, perm, port in (
+                (+1, fwd_span, perm_fwd, port_f),
+                (-1, bwd_span, perm_bwd, port_b)):
+            dist = (direction * (idx - pos)) % k
+            live = (dist >= 1) & (dist <= span)
+            stream = jnp.where(sel(live), buf, sentinel)
+            for r in range(1, span + 1):
+                if count:
+                    sent = _count_words(stream)
+                    words[port] = words[port] + sent
+                    backlog[port] = backlog[port] + self._excess(sent)
+                stream = jax.lax.ppermute(stream, self.axis, perm)
+                arrived = jnp.take(stream, pos, axis=0)
+                src = (pos - direction * r) % k
+                out = jnp.where(sel(idx == src), arrived[None], out)
+                stream = jnp.where(sel(idx == pos), sentinel, stream)
+        return out
+
+    # -- switch tree: up/down routing over grouped crossbar exchanges -------
+
+    def _tree_perm(self, member_step: int, group_step: int):
+        m = self.topology.chips_per_group
+        g = self.topology.n_groups
+        perm = []
+        for c in range(self.n_chips):
+            gg, mm = divmod(c, m)
+            perm.append((c, ((gg + group_step) % g) * m
+                         + (mm + member_step) % m))
+        return perm
+
+    def _tree_exchange(self, x, me, words, backlog):
+        topo = self.topology
+        m, g = topo.chips_per_group, topo.n_groups
+        mygrp, mymem = me // m, me % m
+
+        idx = jnp.arange(topo.n_chips)
+        off = idx != me
+        cross = (idx // m) != mygrp
+        per_block = jnp.sum(
+            (x >= 0).astype(jnp.int32).reshape(topo.n_chips, -1), axis=1)
+        words[TREE_UP_CHIP] = jnp.sum(jnp.where(off, per_block, 0))
+        words[TREE_UP_TRUNK] = jnp.sum(jnp.where(cross, per_block, 0))
+
+        # Stage 1 — members exchange within each group (the FPGA crossbar):
+        # after it, block [dest_group, mm] holds this group's member-mm
+        # traffic for dest_group.  Stage 2 — groups exchange (the Tourmalet
+        # crossbar).  Same split/concat scheme as the hierarchical
+        # ShardMapTransport exchange, realized over relay rounds so it
+        # needs only the flat axis.
+        buf = x.reshape((g, m) + x.shape[1:])
+        b = jnp.moveaxis(buf, 1, 0)
+        b = self._ring_stage(b, m, self._tree_perm(+1, 0),
+                             self._tree_perm(-1, 0), mymem,
+                             words, backlog, 0, 0, count=False)
+        buf = jnp.moveaxis(b, 0, 1)
+        buf = self._ring_stage(buf, g, self._tree_perm(0, +1),
+                               self._tree_perm(0, -1), mygrp,
+                               words, backlog, 0, 0, count=False)
+        y = buf.reshape(x.shape)
+
+        per_block_in = jnp.sum(
+            (y >= 0).astype(jnp.int32).reshape(topo.n_chips, -1), axis=1)
+        words[TREE_DOWN_CHIP] = jnp.sum(jnp.where(off, per_block_in, 0))
+        words[TREE_DOWN_TRUNK] = jnp.sum(jnp.where(cross, per_block_in, 0))
+        for p in (TREE_UP_CHIP, TREE_DOWN_CHIP, TREE_UP_TRUNK,
+                  TREE_DOWN_TRUNK):
+            backlog[p] = self._excess(words[p])
+        return y

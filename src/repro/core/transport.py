@@ -64,20 +64,28 @@ class ShardMapTransport:
         # x: [n_chips_local_view, ...] where leading dim == total chips on
         # the exchange axes.  Per-device in shard_map, leading dim is the
         # full n_chips (each device holds one slab per destination).
-        axes = self._axes()
+        return self._a2a(x, self._axes(), 0)
+
+    def _a2a(self, x: jax.Array, axes: tuple[str, ...],
+             axis: int) -> jax.Array:
+        """One exchange stage per mesh axis, innermost first (cheap local
+        links), outermost last (expensive cross-pod, pre-aggregated) —
+        recursing so any tuple depth works (a 2-axis tuple reproduces the
+        classic pod-local-then-cross-pod two-stage exchange)."""
         if len(axes) == 1:
             return jax.lax.all_to_all(
-                x, axes[0], split_axis=0, concat_axis=0, tiled=True
+                x, axes[0], split_axis=axis, concat_axis=axis, tiled=True
             )
-        # Hierarchical: reshape leading dim [P, Q, ...] for axes (pod, inner):
+        # Split this stage's dim [P * Q, ...] -> [P, Q, ...] for axes
+        # (outer, *inner): inner stages exchange each outer-block in place,
+        # then the outer stage crosses with one aggregated slab per block.
         p = _axis_size(axes[0])
-        q = x.shape[0] // p
-        y = x.reshape((p, q) + x.shape[1:])
-        # Stage 1: inner-axis exchange of each pod-block (pod-local links).
-        y = jax.lax.all_to_all(y, axes[1], split_axis=1, concat_axis=1, tiled=True)
-        # Stage 2: cross-pod exchange, one aggregated slab per pod.
-        y = jax.lax.all_to_all(y, axes[0], split_axis=0, concat_axis=0, tiled=True)
-        return y.reshape((p * q,) + x.shape[1:])
+        q = x.shape[axis] // p
+        y = x.reshape(x.shape[:axis] + (p, q) + x.shape[axis + 1:])
+        y = self._a2a(y, axes[1:], axis + 1)
+        y = jax.lax.all_to_all(y, axes[0], split_axis=axis, concat_axis=axis,
+                               tiled=True)
+        return y.reshape(x.shape)
 
     def put(self, x: jax.Array, perm: list[tuple[int, int]]) -> jax.Array:
         axes = self._axes()

@@ -202,7 +202,7 @@ def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
 
 
 def lower_snn(n_chips: int, mode: str = "simplified",
-              merge_rate: int = 0) -> dict:
+              merge_rate: int = 0, topology=None) -> dict:
     """Dry-run the PAPER'S OWN system at production scale: a BSS-2
     multi-chip network with chips as mesh shards, one full simulation step
     (neuron dynamics -> events -> routing LUT -> buckets -> all_to_all ->
@@ -213,7 +213,10 @@ def lower_snn(n_chips: int, mode: str = "simplified",
     (11 modules) — the Extoll-scale deployment the paper targets.
     mode="full" with merge_rate > 0 additionally threads the persistent
     per-chip merge queue through the shard_map step (the deferred temporal
-    merging of the complete scheme).
+    merging of the complete scheme).  ``topology`` (a
+    ``repro.core.topology.Topology``) replaces the dense exchange with the
+    hop-by-hop routed fabric — the per-shard step then lowers to the
+    topology's ppermute neighbor schedule instead of one all_to_all.
     """
     import dataclasses as _dc
 
@@ -240,7 +243,8 @@ def lower_snn(n_chips: int, mode: str = "simplified",
     mesh = Mesh(np.asarray(devices[:n_chips]), ("chip",))
     comm = _dc.replace(BSS2.comm, n_chips=n_chips, mode=mode,
                        merge_rate=merge_rate)
-    cfg = net.NetworkConfig(comm=comm, neuron_model=BSS2.neuron_model)
+    cfg = net.NetworkConfig(comm=comm, neuron_model=BSS2.neuron_model,
+                            topology=topology)
 
     c = comm
     f32 = jnp.float32
@@ -280,7 +284,8 @@ def lower_snn(n_chips: int, mode: str = "simplified",
         opt = lambda f, z: None if z is None else f(z)
         local_state = net.NetworkState(
             neuron=sq(state.neuron), ring=sq(state.ring), t=state.t,
-            flow=opt(sq, state.flow), merge=opt(sq, state.merge))
+            flow=opt(sq, state.flow), merge=opt(sq, state.merge),
+            sendq=opt(sq, state.sendq))
         new_state, rec = net.shard_step(
             cfg, "chip",
             net.NetworkParams(crossbar=sq(params.crossbar),
@@ -291,7 +296,8 @@ def lower_snn(n_chips: int, mode: str = "simplified",
             net.NetworkState(neuron=ex(new_state.neuron),
                              ring=ex(new_state.ring), t=new_state.t,
                              flow=opt(ex, new_state.flow),
-                             merge=opt(ex, new_state.merge)),
+                             merge=opt(ex, new_state.merge),
+                             sendq=opt(ex, new_state.sendq)),
             ex(rec),
         )
 
@@ -325,6 +331,10 @@ def lower_snn(n_chips: int, mode: str = "simplified",
     mem = compiled.memory_analysis()
     tag = f"{n_chips}chips" if mode == "simplified" \
         else f"{n_chips}chips-merge{merge_rate}"
+    if topology is not None:
+        tag += f"-{topology.kind}"
+        if topology.dims:
+            tag += "x".join(str(d) for d in topology.dims)
     return {
         "arch": "bss2-snn",
         "shape": tag,
@@ -346,7 +356,8 @@ def _stats_proto(c):
     from repro.core import pulse_comm as pc
 
     return pc.CommStats(sent=0, overflow=0, merge_dropped=0, expired=0,
-                        stalled=0, utilization=0, wire_bytes=0, traffic=0)
+                        stalled=0, utilization=0, wire_bytes=0, traffic=0,
+                        link_words=0, link_backlog=0)
 
 
 # Per-arch optimized variants discovered by the §Perf hillclimbing
@@ -383,10 +394,14 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.snn:
-        cells = [(46, "simplified", 0), (512, "simplified", 0),
-                 (46, "full", 32)]
-        for n_chips, mode, merge_rate in cells:
-            r = lower_snn(n_chips, mode=mode, merge_rate=merge_rate)
+        from repro.core import topology as tpo
+
+        cells = [(46, "simplified", 0, None), (512, "simplified", 0, None),
+                 (46, "full", 32, None),
+                 (64, "simplified", 0, tpo.torus2d(8, 8))]
+        for n_chips, mode, merge_rate, topology in cells:
+            r = lower_snn(n_chips, mode=mode, merge_rate=merge_rate,
+                          topology=topology)
             print(f"[     ok] bss2-snn x {r['shape']} "
                   f"flops={r['hlo']['flops']:.3g} "
                   f"coll={r['hlo']['collective_total']:.3g}B "

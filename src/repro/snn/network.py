@@ -44,6 +44,7 @@ from repro.core import events as ev
 from repro.core import fabric as fb
 from repro.core import pulse_comm as pc
 from repro.core import routing as rt
+from repro.core import topology as tpo
 from repro.core import transport as tp
 from repro.snn import neuron as nr
 from repro.snn import synapse as sy
@@ -56,12 +57,18 @@ class NetworkConfig:
     comm_mode: str = "event"           # "event" | "dense"
     record_voltage: bool = True
     flow: fb.FlowControlConfig | None = None   # optional credit back-pressure
+    topology: tpo.Topology | None = None       # switched network (None=dense)
 
     def __post_init__(self):
         if self.neuron_model not in ("lif", "adex"):
             raise ValueError(self.neuron_model)
         if self.comm_mode not in ("event", "dense"):
             raise ValueError(self.comm_mode)
+        if self.topology is not None and \
+                self.topology.n_chips != self.comm.n_chips:
+            raise ValueError(
+                f"topology has {self.topology.n_chips} chips, comm config "
+                f"{self.comm.n_chips}")
 
 
 class NetworkParams(NamedTuple):
@@ -76,6 +83,7 @@ class NetworkState(NamedTuple):
     t: jax.Array
     flow: Any = None             # credit state when cfg.flow is configured
     merge: Any = None            # merge queue (full mode, merge_rate > 0)
+    sendq: Any = None            # retransmit queue (flow.retransmit_depth>0)
 
 
 class StepRecord(NamedTuple):
@@ -91,14 +99,19 @@ def _neuron_fns(cfg: NetworkConfig):
 
 
 def local_fabric(cfg: NetworkConfig) -> fb.PulseFabric:
-    """The fabric binding used by the single-device forms."""
-    return fb.PulseFabric(cfg.comm, transport="local", flow=cfg.flow)
+    """The fabric binding used by the single-device forms (routed through
+    ``cfg.topology`` when one is configured)."""
+    transport = cfg.topology if cfg.topology is not None else "local"
+    return fb.PulseFabric(cfg.comm, transport=transport, flow=cfg.flow)
 
 
 def shard_fabric(cfg: NetworkConfig,
                  axis: str | tuple[str, ...]) -> fb.PulseFabric:
     """The fabric binding used inside shard_map over ``axis``."""
-    transport = tp.ShardMapTransport(axis=axis, n_chips=cfg.comm.n_chips)
+    if cfg.topology is not None:
+        transport = tpo.RoutedTransport(topology=cfg.topology, axis=axis)
+    else:
+        transport = tp.ShardMapTransport(axis=axis, n_chips=cfg.comm.n_chips)
     return fb.PulseFabric(cfg.comm, transport=transport, flow=cfg.flow)
 
 
@@ -142,7 +155,8 @@ def init_state(cfg: NetworkConfig, params: NetworkParams) -> NetworkState:
     )(jnp.arange(c.n_chips))
     fabric = local_fabric(cfg)
     return NetworkState(neuron=nstate, ring=ring, t=jnp.asarray(0, jnp.int32),
-                        flow=fabric.init_flow(), merge=fabric.init_merge())
+                        flow=fabric.init_flow(), merge=fabric.init_merge(),
+                        sendq=fabric.init_sendq())
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +192,8 @@ def _zero_stats(c: pc.PulseCommConfig) -> pc.CommStats:
         sent=z, overflow=z, merge_dropped=z, expired=z, stalled=z,
         utilization=jnp.zeros((c.n_chips,), jnp.float32),
         wire_bytes=z, traffic=jnp.zeros((c.n_chips, c.n_chips), jnp.int32),
+        link_words=jnp.zeros((c.n_chips, 1), jnp.int32),
+        link_backlog=jnp.zeros((c.n_chips, 1), jnp.int32),
     )
 
 
@@ -239,6 +255,9 @@ def _step_impl(
     merge = state.merge
     if fabric.merge_enabled and merge is None:
         merge = fabric.init_merge()
+    sendq = state.sendq
+    if fabric.sendq_enabled and sendq is None:
+        sendq = fabric.init_sendq()
     if cfg.comm_mode == "dense":
         if not fabric.batched:
             raise NotImplementedError(
@@ -249,13 +268,14 @@ def _step_impl(
         t = state.t
         ebs = vm(lambda s: ev.from_spikes(s > 0.5, t, c.event_capacity)[0])(
             spikes)
-        res = fabric.step(ebs, table, ring, flow, merge)
-        ring, stats, flow, merge = res.ring, res.stats, res.flow, res.merge
+        res = fabric.step(ebs, table, ring, flow, merge, sendq)
+        ring, stats = res.ring, res.stats
+        flow, merge, sendq = res.flow, res.merge, res.sendq
 
     ring = vm(dl.tick)(ring)
     voltage = nstate.v if cfg.record_voltage else jnp.zeros_like(nstate.v)
     new_state = NetworkState(neuron=nstate, ring=ring, t=state.t + 1,
-                             flow=flow, merge=merge)
+                             flow=flow, merge=merge, sendq=sendq)
     rec = StepRecord(spikes=spikes, voltage=voltage, stats=stats)
     return new_state, rec, new_w, new_stdp
 
@@ -284,6 +304,8 @@ def _ensure_carries(fabric: fb.PulseFabric, state: NetworkState) -> NetworkState
         state = state._replace(flow=fabric.init_flow())
     if fabric.merge_enabled and state.merge is None:
         state = state._replace(merge=fabric.init_merge())
+    if fabric.sendq_enabled and state.sendq is None:
+        state = state._replace(sendq=fabric.init_sendq())
     return state
 
 

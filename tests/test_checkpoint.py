@@ -124,6 +124,54 @@ def test_network_state_with_merge_queue_roundtrip(tmp_path):
     assert int(np.asarray(a.merge.valid).sum()) == 0
 
 
+def test_pre_word_merge_checkpoint_raises_clear_error(tmp_path):
+    """Satellite pin: a synthetic PR-2-era checkpoint (three-array
+    MergeBuffer: addr/deadline/valid) must be rejected with a migration
+    hint when restored into the word-format queue — not silently dropped
+    or restored into the wrong leaves."""
+    from typing import NamedTuple
+
+    from repro.core import merge as mg
+
+    class OldMergeBuffer(NamedTuple):  # the PR-2 leaf structure
+        addr: jnp.ndarray
+        deadline: jnp.ndarray
+        valid: jnp.ndarray
+
+    depth = 16
+    old_state = {
+        "ring": jnp.zeros((4, 8), jnp.int32),
+        "merge": OldMergeBuffer(
+            addr=jnp.arange(depth, dtype=jnp.int32),
+            deadline=jnp.arange(depth, dtype=jnp.int32),
+            valid=jnp.ones((depth,), bool)),
+    }
+    ckpt.save(old_state, str(tmp_path), 7)
+
+    new_state = {
+        "ring": jnp.zeros((4, 8), jnp.int32),
+        "merge": mg.merge_init(depth),
+    }
+    with pytest.raises(ValueError, match="pre-word-format"):
+        ckpt.restore(str(tmp_path), 7, new_state)
+    # the hint fires even with the strict sweep disabled (missing-leaf path)
+    with pytest.raises(ValueError, match="init_merge"):
+        ckpt.restore(str(tmp_path), 7, new_state, strict=False)
+
+
+def test_strict_restore_rejects_extra_leaves(tmp_path):
+    """A checkpoint carrying leaves the target does not request is a stale
+    structural mismatch under the default strict restore; strict=False
+    deliberately restores the sub-tree."""
+    tree = _tree(jax.random.PRNGKey(6))
+    ckpt.save(tree, str(tmp_path), 1)
+    partial = {"params": tree["params"], "step": tree["step"]}
+    with pytest.raises(ValueError, match="carries leaves"):
+        ckpt.restore(str(tmp_path), 1, partial)
+    out = ckpt.restore(str(tmp_path), 1, partial, strict=False)
+    _assert_tree_equal(partial, out)
+
+
 def test_elastic_reshard_on_load(tmp_path):
     """N-device checkpoint loads onto a different mesh (1 device here) via
     explicit shardings."""

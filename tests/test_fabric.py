@@ -278,6 +278,91 @@ def test_network_threads_credit_state_across_steps():
 
 
 # ---------------------------------------------------------------------------
+# Retransmit send queue (flow control with retransmit_depth > 0)
+# ---------------------------------------------------------------------------
+
+def _tick(ring):
+    return dl.DelayRing(ring=ring.ring, now=ring.now + 1)
+
+
+def _run_flow(flowcfg, steps=12, key=1):
+    """Drive one burst through tight credits, then drain; returns the
+    cumulative accounting dict."""
+    cfg, ebs, tables, rings = _setup(4, 64, 4, rate=0.9, bpc=2, key=key)
+    zeros = jax.tree.map(jnp.zeros_like, ebs)
+    fab = fb.PulseFabric(cfg, transport="local", flow=flowcfg)
+    ring, flow, merge, sendq = rings, None, None, None
+    tot = dict(sent=0, overflow=0, expired=0, stalled=0)
+    for t in range(steps):
+        res = fab.step(ebs if t == 0 else zeros, tables, ring, flow, merge,
+                       sendq)
+        ring, flow, merge, sendq = res.ring, res.flow, res.merge, res.sendq
+        for f in tot:
+            tot[f] += int(np.asarray(getattr(res.stats, f)).sum())
+        ring = _tick(ring)   # advance the clock so queued deadlines age
+    tot["deposited"] = int(np.asarray(ring.ring).sum())
+    tot["queued"] = (0 if sendq is None
+                     else int(np.asarray(sendq.occupancy()).sum()))
+    return tot
+
+
+def test_retransmit_requeues_instead_of_dropping():
+    """Satellite pin: with a roomy send queue, credit-stalled events are
+    re-offered on later steps — zero stalled drops, and conservation
+    injected == delivered + expired + overflow + queued + stalled holds
+    over the whole run."""
+    tot = _run_flow(fb.FlowControlConfig(capacity=2, drain_rate=1,
+                                         retransmit_depth=128))
+    assert tot["stalled"] == 0
+    assert tot["queued"] == 0   # drained once credits returned
+    assert tot["sent"] == (tot["deposited"] + tot["expired"]
+                           + tot["overflow"] + tot["stalled"]
+                           + tot["queued"])
+    # and it delivers strictly more than the historical drop-and-account
+    dropped = _run_flow(fb.FlowControlConfig(capacity=2, drain_rate=1))
+    assert dropped["stalled"] > 0
+    assert tot["deposited"] + tot["expired"] > dropped["deposited"] + \
+        dropped["expired"]
+
+
+def test_retransmit_bounded_queue_overflow_is_accounted():
+    """A too-small send queue drops the surplus into ``stalled`` — never
+    silently — and conservation still holds."""
+    tot = _run_flow(fb.FlowControlConfig(capacity=1, drain_rate=1,
+                                         retransmit_depth=4))
+    assert tot["stalled"] > 0
+    assert tot["sent"] == (tot["deposited"] + tot["expired"]
+                           + tot["overflow"] + tot["stalled"]
+                           + tot["queued"])
+
+
+def test_retransmit_queued_events_expire_when_stalled_too_long():
+    """A queued event is re-judged against the injection window every step:
+    starved of credits long enough it lands in ``expired``, not on the
+    wire (and never aliases across the 8-bit wrap)."""
+    tot = _run_flow(fb.FlowControlConfig(capacity=0, drain_rate=0,
+                                         retransmit_depth=512), steps=24)
+    assert tot["queued"] == 0 and tot["deposited"] == 0
+    assert tot["expired"] > 0
+    assert tot["sent"] == tot["expired"] + tot["overflow"] + tot["stalled"]
+
+
+def test_ample_credits_with_retransmit_match_no_flow_bitwise():
+    cfg, ebs, tables, rings = _setup(4, 32, 8, bpc=2)
+    base = fb.PulseFabric(cfg, transport="local").step(ebs, tables, rings)
+    q = fb.PulseFabric(
+        cfg, transport="local",
+        flow=fb.FlowControlConfig(capacity=cfg.n_buckets + 1,
+                                  drain_rate=cfg.n_buckets + 1,
+                                  retransmit_depth=32),
+    ).step(ebs, tables, rings)
+    np.testing.assert_array_equal(np.asarray(q.ring.ring),
+                                  np.asarray(base.ring.ring))
+    assert int(np.asarray(q.sendq.occupancy()).sum()) == 0
+    assert int(np.asarray(q.stats.stalled).sum()) == 0
+
+
+# ---------------------------------------------------------------------------
 # Transport registry
 # ---------------------------------------------------------------------------
 
@@ -340,6 +425,9 @@ _EQUIV_SCRIPT = textwrap.dedent("""
             ("simplified", 1, None, 0), ("full", 2, None, 0),
             ("simplified", 2,
              fb.FlowControlConfig(capacity=2, drain_rate=1), 0),
+            ("simplified", 2,
+             fb.FlowControlConfig(capacity=2, drain_rate=1,
+                                  retransmit_depth=16), 0),
             ("full", 2, None, 3)]:
         cfg = pc.PulseCommConfig(
             n_chips=n, neurons_per_chip=N, n_inputs_per_chip=N,
@@ -353,27 +441,30 @@ _EQUIV_SCRIPT = textwrap.dedent("""
         rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, N))(jnp.arange(n))
 
         local = fb.PulseFabric(cfg, transport="local", flow=flow)
-        # two steps so the stateful merge queue actually carries over
+        # two steps so the stateful merge/send queues actually carry over
         ref1 = local.step(ebs, tables, rings, local.init_flow(),
-                          local.init_merge())
-        ref = local.step(ebs, tables, ref1.ring, ref1.flow, ref1.merge)
+                          local.init_merge(), local.init_sendq())
+        ref = local.step(ebs, tables, ref1.ring, ref1.flow, ref1.merge,
+                         ref1.sendq)
 
         shard = fb.PulseFabric(cfg, transport="shard_map", flow=flow)
         flow_b = local.init_flow()  # batched [n] state, split per shard
         merge_b = local.init_merge()
+        sendq_b = local.init_sendq()
 
-        def body(e, t, r, f, m):
+        def body(e, t, r, f, m, q):
             sq = lambda z: jax.tree.map(lambda a: a[0], z)
             opt = lambda z: None if z is None else sq(z)
-            out1 = shard.step(sq(e), sq(t), sq(r), opt(f), opt(m))
-            out = shard.step(sq(e), sq(t), out1.ring, out1.flow, out1.merge)
+            out1 = shard.step(sq(e), sq(t), sq(r), opt(f), opt(m), opt(q))
+            out = shard.step(sq(e), sq(t), out1.ring, out1.flow, out1.merge,
+                             out1.sendq)
             return jax.tree.map(lambda a: a[None] if hasattr(a, "ndim")
                                 else a, out)
 
-        specs = (P("chip"),) * 5
+        specs = (P("chip"),) * 6
         got = shard_map(body, mesh=mesh, in_specs=specs,
                         out_specs=P("chip"), check_rep=False)(
-            ebs, tables, rings, flow_b, merge_b)
+            ebs, tables, rings, flow_b, merge_b, sendq_b)
 
         np.testing.assert_array_equal(np.asarray(got.ring.ring),
                                       np.asarray(ref.ring.ring))
@@ -397,6 +488,13 @@ _EQUIV_SCRIPT = textwrap.dedent("""
                     np.asarray(getattr(ref.merge, f)), err_msg="merge." + f)
             assert int(np.asarray(ref.merge.valid).sum()) > 0, \
                 "merge case must actually queue events"
+        if flow is not None and flow.retransmit_depth > 0:
+            for f in ("words", "dest"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(got.sendq, f)),
+                    np.asarray(getattr(ref.sendq, f)), err_msg="sendq." + f)
+            assert int(np.asarray(ref.sendq.occupancy()).sum()) > 0, \
+                "retransmit case must actually queue events"
         print(f"EQUIV_OK mode={mode} bpc={bpc} flow={flow is not None} "
               f"merge={merge_rate}")
     print("FABRIC_EQUIVALENCE_OK")

@@ -1,0 +1,77 @@
+"""Routing-table builders: the vectorized ``from_connection_list`` is
+regression-pinned bitwise against the retained per-row loop builder."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import events as ev
+from repro.core import routing as rt
+
+
+def _assert_tables_equal(a: rt.RoutingTable, b: rt.RoutingTable):
+    for f in rt.RoutingTable._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+def _random_connections(rng, n_rows, n_neurons, n_chips, with_delay):
+    cols = [rng.integers(0, n_neurons, n_rows),
+            rng.integers(0, n_chips, n_rows),
+            rng.integers(0, n_neurons, n_rows)]
+    if with_delay:
+        cols.append(rng.integers(1, 12, n_rows))
+    return np.stack(cols, axis=1)
+
+
+@pytest.mark.parametrize("with_delay", [False, True])
+@pytest.mark.parametrize("n_rows", [1, 7, 200, 1000])
+def test_vectorized_matches_loop_builder(n_rows, with_delay):
+    rng = np.random.default_rng(n_rows + with_delay)
+    conns = _random_connections(rng, n_rows, n_neurons=64, n_chips=8,
+                                with_delay=with_delay)
+    _assert_tables_equal(
+        rt.from_connection_list(conns, 64),
+        rt._from_connection_list_loops(conns, 64),
+    )
+
+
+def test_vectorized_matches_loop_builder_edge_cases():
+    # empty list
+    empty = np.zeros((0, 3), np.int64)
+    _assert_tables_equal(rt.from_connection_list(empty, 8),
+                         rt._from_connection_list_loops(empty, 8))
+    # one source hogging the whole fan-out, interleaved with others —
+    # slots must keep connection order per source (FIFO LUT rows)
+    conns = np.asarray([[3, 0, 10, 2], [1, 1, 11, 3], [3, 2, 12, 4],
+                        [3, 0, 13, 5], [1, 0, 14, 6]])
+    a = rt.from_connection_list(conns, 8)
+    b = rt._from_connection_list_loops(conns, 8)
+    _assert_tables_equal(a, b)
+    np.testing.assert_array_equal(np.asarray(a.dest_addr[3, :3]),
+                                  [10, 12, 13])
+    # max_fanout: padding accepted, violation rejected identically
+    padded = rt.from_connection_list(conns, 8, max_fanout=5)
+    assert padded.fanout == 5
+    _assert_tables_equal(padded,
+                         rt._from_connection_list_loops(conns, 8,
+                                                        max_fanout=5))
+    for builder in (rt.from_connection_list,
+                    rt._from_connection_list_loops):
+        with pytest.raises(ValueError, match="fan-out"):
+            builder(conns, 8, max_fanout=2)
+        with pytest.raises(ValueError, match=r"\[n, 3\|4\]"):
+            builder(np.zeros((4, 2)), 8)
+
+
+def test_from_connection_list_default_delay_and_sentinels():
+    conns = np.asarray([[0, 1, 5], [2, 0, 7]])
+    t = rt.from_connection_list(conns, 4, default_delay=3)
+    assert int(t.delay[0, 0]) == 3
+    assert int(t.dest_addr[1, 0]) == ev.ADDR_SENTINEL
+    assert not bool(t.valid[1, 0])
+    routed = rt.route(
+        ev.from_arrays(jnp.asarray([0, 2]), jnp.asarray([0, 0])), t)
+    np.testing.assert_array_equal(np.asarray(routed.dest_addr), [5, 7])
+    np.testing.assert_array_equal(np.asarray(routed.deadline), [3, 3])

@@ -188,3 +188,49 @@ def test_hierarchical_two_stage_exchange():
         cwd="/root/repo",
     )
     assert "HIERARCHICAL_TRANSPORT_OK" in out.stdout, out.stderr[-3000:]
+
+
+_THREE_AXIS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.core import transport as tp
+
+    # 2 pods x 2 boards x 2 chips: the three-stage exchange must equal the
+    # flat all_to_all (regression: the old implementation only ran the
+    # FIRST inner axis, silently skipping the rest of the tuple).
+    n = 8
+    mesh = Mesh(np.asarray(jax.devices()).reshape(2, 2, 2),
+                ("pod", "board", "chip"))
+    x = jnp.arange(n * n * 3, dtype=jnp.int32).reshape(n, n, 3)
+    want = tp.LocalTransport(n_chips=n).all_to_all(x)
+
+    tr = tp.ShardMapTransport(axis=("pod", "board", "chip"), n_chips=n)
+    axes = ("pod", "board", "chip")
+    f = shard_map(lambda s: tr.all_to_all(s), mesh=mesh,
+                  in_specs=P(axes), out_specs=P(axes))
+    got = f(x.reshape(n * n, 3)).reshape(n, n, 3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    # chip_index composes all three axes most-significant-first
+    g = shard_map(lambda s: s + tr.chip_index(), mesh=mesh,
+                  in_specs=P(axes), out_specs=P(axes))
+    idx = g(jnp.zeros((n,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(n))
+    print("THREE_AXIS_TRANSPORT_OK")
+""")
+
+
+def test_hierarchical_three_axis_exchange():
+    """Satellite pin: a 3-axis mesh tuple (pod x board x chip) exchanges
+    correctly — every axis gets its stage, innermost first."""
+    out = subprocess.run(
+        [sys.executable, "-c", _THREE_AXIS_SCRIPT],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert "THREE_AXIS_TRANSPORT_OK" in out.stdout, out.stderr[-3000:]
