@@ -148,24 +148,14 @@ def sweep_capacity(n_chips=8, n_neurons=256, rate=0.2, capacities=(2, 4, 8, 16, 
         counter = {}
         fab = _counting_local_fabric(cfg, counter)
         step = jax.jit(lambda e, t, r: fab.step(e, t, r)[:3])
-        new_rings, _, stats = step(ebs, tables, rings)
-        jax.block_until_ready(new_rings.ring)
-        t0 = time.perf_counter()
-        for _ in range(5):
-            out = step(ebs, tables, rings)
-        jax.block_until_ready(out[0].ring)
-        us = (time.perf_counter() - t0) / 5 * 1e6
+        us = time_loop(step, ebs, tables, rings)
+        _, _, stats = step(ebs, tables, rings)
 
         # The pre-word-format baseline: three slabs per exchange.
         counter_soa = {}
         soa_step = jax.jit(_soa_reference_step(cfg, counter_soa))
-        soa_rings, soa_stats = soa_step(ebs, tables, rings)
-        jax.block_until_ready(soa_rings.ring)
-        t0 = time.perf_counter()
-        for _ in range(5):
-            soa_rings, soa_stats = soa_step(ebs, tables, rings)
-        jax.block_until_ready(soa_rings.ring)
-        us_soa = (time.perf_counter() - t0) / 5 * 1e6
+        us_soa = time_loop(soa_step, ebs, tables, rings)
+        _, soa_stats = soa_step(ebs, tables, rings)
 
         sent = int(stats.sent.sum())
         of = int(stats.overflow.sum())
@@ -188,6 +178,77 @@ def sweep_capacity(n_chips=8, n_neurons=256, rate=0.2, capacities=(2, 4, 8, 16, 
     return rows
 
 
+def time_loop(fn, *args, reps=5, batches=5):
+    """us per call of an already-warm jitted callable.
+
+    No host syncs inside the timed loop (one blocking read per batch);
+    the best of ``batches`` batch means is reported — the standard noisy-
+    machine estimator (load spikes only ever make a batch slower), which
+    keeps the BENCH_fabric.json trajectory stable enough for the
+    benchmarks/compare.py regression gate."""
+    out = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    best = float("inf")
+    for _ in range(batches):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return best * 1e6
+
+
+def superstep_sweep(supersteps=(1, 2, 4, 8), n_chips=8, n_neurons=256,
+                    rate=0.2, bucket_capacity=16, seed=6, reps=20):
+    """The superstep exchange schedule: one fused collective per B steps.
+
+    The same per-step spike load is driven through ``superstep(B)`` for
+    each B; us/step divides the block time by B, so the row directly shows
+    the launch-overhead amortization (collective launches per simulated
+    step = 1/B; delivery is bitwise-equal to B=1 — pinned in
+    tests/test_superstep.py).  Unlike the other sweeps the B range is NOT
+    shrunk under ``--smoke``: the superstep_B{1,2,4,8} rows are the gated
+    perf deliverable tracked across PRs, so smoke only trims the timing
+    reps."""
+    key = jax.random.PRNGKey(seed)
+    # slack > B + deferral for every B in the sweep: delays comfortably
+    # above max(supersteps) so no event is rejected by the tightened window
+    table = rt.random_table(key, n_neurons, n_chips, max_delay=14,
+                            min_delay=10)
+    tables = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_chips,) + x.shape), table)
+    rows = []
+    for b in supersteps:
+        cfg = pc.PulseCommConfig(
+            n_chips=n_chips, neurons_per_chip=n_neurons,
+            n_inputs_per_chip=n_neurons, event_capacity=n_neurons,
+            bucket_capacity=bucket_capacity, ring_depth=16, superstep=b)
+        counter = {}
+        fab = _counting_local_fabric(cfg, counter)
+        rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
+            jnp.arange(n_chips))
+        ks = jax.random.split(key, b)
+        spikes = jnp.stack([jax.random.uniform(k, (n_chips, n_neurons))
+                            < rate for k in ks])
+        ebs = jax.vmap(jax.vmap(
+            lambda s: ev.from_spikes(s, 0, n_neurons)[0]))(spikes)
+        sstep = fab.jit_superstep()
+        us_block = time_loop(sstep, ebs, tables, rings, reps=reps)
+        res = sstep(ebs, tables, rings)
+        rows.append({
+            "superstep": b,
+            "us_per_block": us_block,
+            "us_per_step": us_block / b,
+            "collectives_per_flush": counter.get("all_to_all", 0),
+            "collectives_per_step": counter.get("all_to_all", 0) / b,
+            "events_per_step": int(np.asarray(res.stats.sent).sum()) // b,
+            # per-step, like us_per_step, so the column is comparable
+            # across B (the block moves b x this)
+            "wire_bytes": int(np.asarray(res.stats.wire_bytes).sum()) // b,
+        })
+    return rows
+
+
 def merge_congestion(capacities=(4, 8, 16, 32), rate_limit=16, seed=1):
     """Bigger packets arrive in bursts: a rate-limited merge buffer sees
     higher peak occupancy (the congestion cost of aggressive aggregation)."""
@@ -198,17 +259,21 @@ def merge_congestion(capacities=(4, 8, 16, 32), rate_limit=16, seed=1):
         occupancy = 0
         buf = mg.merge_init(256)
         drops = 0
+        jstep = jax.jit(
+            lambda b, a, d, v: mg.merge_step(b, a, d, v, rate=rate_limit))
+        dead = addr = valid = None
         for t in range(16):
             k = jax.random.fold_in(key, t * 131 + cap)
             # each stream delivers a full packet of `cap` events
             dead = jax.random.randint(k, (n_streams, cap), t, t + 8)
             addr = jax.random.randint(k, (n_streams, cap), 0, 256)
             valid = jnp.ones((n_streams, cap), bool)
-            buf, _, d = mg.merge_step(buf, addr, dead, valid, rate=rate_limit)
+            buf, _, d = jstep(buf, addr, dead, valid)
             occupancy = max(occupancy, int(buf.occupancy()))
             drops += int(d)
+        us = time_loop(jstep, buf, addr, dead, valid)
         rows.append({"capacity": cap, "peak_queue": occupancy,
-                     "merge_drops": drops})
+                     "merge_drops": drops, "us_per_step": us})
     return rows
 
 
@@ -238,7 +303,7 @@ def merge_fabric_sweep(merge_rates=(2, 4, 8, 16), merge_depths=(8, 32, 128),
             fab = PulseFabric(cfg, transport="local")
             rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
                 jnp.arange(n_chips))
-            step = jax.jit(fab.step)
+            step = fab.jit_step()
             ring, merge = rings, fab.init_merge()
             peak = drops = emitted_total = 0
             occ_sum = 0
@@ -256,7 +321,11 @@ def merge_fabric_sweep(merge_rates=(2, 4, 8, 16), merge_depths=(8, 32, 128),
                 # events emitted at step t of a burst injected at step <2
                 # waited ~t steps (t - injection step for the later burst)
                 wait_sum += n_emit * max(t - 1, 0)
+            # real perf row: the jitted step under merge load (loaded-queue
+            # steady state, no host syncs inside the timed loop)
+            us = time_loop(step, ebs, tables, ring, None, merge)
             rows.append({
+                "us_per_step": us,
                 "merge_rate": mrate,
                 "merge_depth": mdepth,
                 "bucket_capacity": bucket_capacity,
@@ -292,7 +361,7 @@ def merge_packet_size_sweep(capacities=(4, 8, 16, 32, 64), merge_rate=8,
         fab = PulseFabric(cfg, transport="local")
         rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
             jnp.arange(n_chips))
-        step = jax.jit(fab.step)
+        step = fab.jit_step()
         ring, merge = rings, fab.init_merge()
         peak = drops = 0
         wire = sent = overflow = 0
@@ -308,6 +377,7 @@ def merge_packet_size_sweep(capacities=(4, 8, 16, 32, 64), merge_rate=8,
         payload = (sent - overflow) * pc.EVENT_BYTES
         rows.append({
             "capacity": cap,
+            "us_per_step": time_loop(step, ebs, tables, ring, None, merge),
             "wire_efficiency": payload / wire if wire else 0.0,
             "peak_queue": peak,
             "merge_drops": drops,
@@ -339,7 +409,7 @@ def flow_backpressure(capacities=(1, 2, 4, 8), drain_rate=2, n_chips=4,
         rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
             jnp.arange(n_chips))
         flow = fab.init_flow()
-        step = jax.jit(fab.step)
+        step = fab.jit_step()
         stalled = sent = 0
         for _ in range(steps):
             res = step(ebs, tables, rings, flow)
@@ -347,6 +417,8 @@ def flow_backpressure(capacities=(1, 2, 4, 8), drain_rate=2, n_chips=4,
             stalled += int(res.stats.stalled.sum())
             sent += int(res.stats.sent.sum())
         rows.append({"credits": cap,
+                     "us_per_step": time_loop(step, ebs, tables, rings,
+                                               flow),
                      "stall_frac": stalled / max(sent, 1)})
     return rows
 
@@ -370,14 +442,8 @@ def message_rate_scaling(chip_counts=(2, 4, 8, 16), n_neurons=128, rate=0.3,
             jnp.arange(n_chips))
         fab = PulseFabric(cfg, transport="local")
         step = jax.jit(lambda e, t, r: fab.step(e, t, r)[:3])
-        out = step(ebs, tables, rings)
-        jax.block_until_ready(out[0].ring)
-        t0 = time.perf_counter()
-        for _ in range(5):
-            out = step(ebs, tables, rings)
-        jax.block_until_ready(out[0].ring)
-        us = (time.perf_counter() - t0) / 5 * 1e6
-        stats = out[2]
+        us = time_loop(step, ebs, tables, rings)
+        stats = step(ebs, tables, rings)[2]
         rows.append({
             "n_chips": n_chips,
             "us_per_step": us,
@@ -405,25 +471,36 @@ def main(csv=True, smoke=False):
             f"coll_soa={r['collectives_soa']};"
             f"wire_soa={r['wire_bytes_soa']};"
             f"us_soa={r['us_per_step_soa']:.1f}"))
+    for r in superstep_sweep(supersteps=(1, 2, 4, 8),
+                             reps=8 if smoke else 20):
+        out.append((
+            "superstep_B%d" % r["superstep"], r["us_per_step"],
+            r["wire_bytes"],
+            f"us_block={r['us_per_block']:.1f};"
+            f"coll_per_flush={r['collectives_per_flush']};"
+            f"coll_per_step={r['collectives_per_step']:.3f};"
+            f"ev_step={r['events_per_step']}"))
     for r in merge_congestion(capacities=(8,) if smoke else (4, 8, 16, 32)):
-        out.append(("merge_congestion_cap_%d" % r["capacity"], 0.0, 0,
+        out.append(("merge_congestion_cap_%d" % r["capacity"],
+                    r["us_per_step"], 0,
                     f"peak_queue={r['peak_queue']};drops={r['merge_drops']}"))
     for r in merge_fabric_sweep(
             merge_rates=(4,) if smoke else (2, 4, 8, 16),
             merge_depths=(32,) if smoke else (8, 32, 128)):
         out.append((
             "merge_fabric_r%d_d%d" % (r["merge_rate"], r["merge_depth"]),
-            0.0, 0,
+            r["us_per_step"], 0,
             f"peak={r['peak_queue']};mean={r['mean_queue']:.1f};"
             f"drops={r['merge_drops']};wait={r['mean_emit_wait']:.2f}"))
     for r in merge_packet_size_sweep(
             capacities=(16,) if smoke else (4, 8, 16, 32, 64)):
         out.append((
-            "merge_packet_cap_%d" % r["capacity"], 0.0, 0,
+            "merge_packet_cap_%d" % r["capacity"], r["us_per_step"], 0,
             f"eff={r['wire_efficiency']:.3f};peak={r['peak_queue']};"
             f"drops={r['merge_drops']}"))
     for r in flow_backpressure(capacities=(2,) if smoke else (1, 2, 4, 8)):
-        out.append(("flow_backpressure_credits_%d" % r["credits"], 0.0, 0,
+        out.append(("flow_backpressure_credits_%d" % r["credits"],
+                    r["us_per_step"], 0,
                     f"stall_frac={r['stall_frac']:.3f}"))
     for r in message_rate_scaling(chip_counts=(4,) if smoke
                                   else (2, 4, 8, 16)):

@@ -1,0 +1,171 @@
+"""Benchmark regression gate: diff a fresh BENCH_fabric.json against the
+committed baseline.
+
+Rows are matched by ``name``; only the *timed* hot-path families are
+gated (aggregation capacity sweep, topology sweep, superstep schedule —
+the rows whose ``us_per_call`` measures a jitted fabric step), and only
+when both sides carry a measurement above the noise floor.  A fresh row
+slower than ``threshold`` x the baseline fails the run (exit code 1), so
+CI catches hot-path regressions instead of just archiving the trajectory.
+
+Each row gets two ratios: *raw* (fresh / baseline us) and *normalized*
+(raw divided by the median raw ratio of all gated rows).  The committed
+baseline is measured on whatever machine cut the PR, so a uniformly
+slower or faster CI runner shifts every raw ratio by the same factor —
+the median — while a localized hot-path regression moves its rows
+relative to the rest.  A row fails only when BOTH ratios exceed the
+threshold: raw alone would flag a slower runner wholesale, normalized
+alone would flag rows that merely sped up less than the median on a
+faster one.  Normalization is blind to a *uniform* regression of the
+code every gated row shares (the fabric step itself), so the median raw
+ratio is additionally capped by ``--median-threshold``: past that, the
+whole suite slowed down — a shared-hot-path regression or a much slower
+runner, either way worth a red build and a human look.
+``--no-normalize`` gates on the raw ratio only (same-machine trend
+tracking).
+
+New rows (no baseline counterpart) and removed rows are reported but
+never fail — sweeps are allowed to grow.
+
+``--fresh`` accepts several measurement files; each row's fastest
+observation is gated.  A transient load spike on a shared runner only
+ever makes a run *slower*, so requiring a row to regress in every
+repetition (CI measures the smoke sweep twice) removes most
+single-sample flake without loosening the threshold.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run --smoke --json BENCH_fresh.json
+    PYTHONPATH=src python -m benchmarks.compare \
+        --baseline BENCH_fabric.json --fresh BENCH_fresh.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Row families whose us_per_call times a jitted fabric step (the gated
+# perf surface).  Untimed rows carry us_per_call == 0.0 and are skipped
+# regardless.
+GATED_PREFIXES = (
+    "aggregation_capacity_",
+    "topology_",
+    "superstep_B",
+)
+
+# Rows faster than this are dominated by timer/dispatch noise on CI
+# runners; don't gate them.
+MIN_US = 50.0
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        return {row["name"]: row for row in json.load(f)}
+
+
+def merge_best(runs: list[dict[str, dict]]) -> dict[str, dict]:
+    """Per-row fastest observation across repeated measurement runs."""
+    best: dict[str, dict] = {}
+    for rows in runs:
+        for name, row in rows.items():
+            cur = best.get(name)
+            if cur is None or (float(row.get("us_per_call", 0.0))
+                               < float(cur.get("us_per_call", 0.0))):
+                best[name] = row
+    return best
+
+
+def compare(baseline: dict[str, dict], fresh: dict[str, dict],
+            threshold: float = 1.3,
+            min_us: float = MIN_US,
+            normalize: bool = True,
+            median_threshold: float = 2.0) -> tuple[list[str], list[str]]:
+    """Returns (regressions, notes) — human-readable report lines."""
+    regressions, notes = [], []
+    ratios: dict[str, float] = {}
+    for name, row in sorted(fresh.items()):
+        if not name.startswith(GATED_PREFIXES):
+            continue
+        us = float(row.get("us_per_call", 0.0))
+        base = baseline.get(name)
+        if base is None:
+            notes.append(f"NEW       {name}: {us:.1f} us (no baseline)")
+            continue
+        base_us = float(base.get("us_per_call", 0.0))
+        if base_us < min_us or us < min_us:
+            notes.append(f"SKIP      {name}: below noise floor "
+                         f"({base_us:.1f} -> {us:.1f} us)")
+            continue
+        ratios[name] = us / base_us
+
+    scale = 1.0
+    if normalize and ratios:
+        srt = sorted(ratios.values())
+        mid = len(srt) // 2
+        scale = (srt[mid] if len(srt) % 2
+                 else 0.5 * (srt[mid - 1] + srt[mid]))
+        notes.append(f"# machine-speed normalization: median ratio "
+                     f"{scale:.2f}x")
+        if scale > median_threshold:
+            regressions.append(
+                f"REGRESSED <all gated rows>: median raw ratio "
+                f"{scale:.2f}x exceeds {median_threshold:.2f}x — the "
+                "shared hot path regressed uniformly (or the runner is "
+                "drastically slower; re-baseline if so)")
+    for name, raw in sorted(ratios.items()):
+        norm = raw / scale
+        base_us = float(baseline[name]["us_per_call"])
+        us = float(fresh[name]["us_per_call"])
+        line = (f"{name}: {base_us:.1f} -> {us:.1f} us "
+                f"({raw:.2f}x raw, {norm:.2f}x normalized)")
+        if min(raw, norm) > threshold:
+            regressions.append(f"REGRESSED {line}")
+        else:
+            notes.append(f"OK        {line}")
+    for name in sorted(set(baseline) - set(fresh)):
+        if name.startswith(GATED_PREFIXES):
+            notes.append(f"REMOVED   {name} (present in baseline only)")
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--baseline", default="BENCH_fabric.json",
+                   help="committed baseline rows")
+    p.add_argument("--fresh", required=True, nargs="+",
+                   help="freshly measured rows to gate (several files -> "
+                        "per-row fastest observation)")
+    p.add_argument("--threshold", type=float, default=1.3,
+                   help="max allowed fresh/baseline time ratio")
+    p.add_argument("--min-us", type=float, default=MIN_US,
+                   help="noise floor; faster rows are not gated")
+    p.add_argument("--no-normalize", action="store_true",
+                   help="compare raw ratios (same-machine trend checks)")
+    p.add_argument("--median-threshold", type=float, default=2.0,
+                   help="max allowed median raw ratio (uniform-regression "
+                        "backstop for the normalized gate)")
+    args = p.parse_args(argv)
+
+    regressions, notes = compare(load_rows(args.baseline),
+                                 merge_best([load_rows(f)
+                                             for f in args.fresh]),
+                                 threshold=args.threshold,
+                                 min_us=args.min_us,
+                                 normalize=not args.no_normalize,
+                                 median_threshold=args.median_threshold)
+    for line in notes:
+        print(line)
+    for line in regressions:
+        print(line)
+    if regressions:
+        print(f"# {len(regressions)} row(s) regressed beyond "
+              f"{args.threshold:.2f}x")
+        return 1
+    print("# no gated regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,6 +39,7 @@ from repro.core.topology import (
 from repro.core.pulse_comm import (
     CommStats,
     Delivered,
+    FlushBuffer,
     PulseCommConfig,
     comm_step,
     multi_chip_step,
@@ -57,6 +58,7 @@ __all__ = [
     "CommStats",
     "Delivered",
     "FabricResult",
+    "FlushBuffer",
     "FlowControlConfig",
     "PulseCommConfig",
     "PulseFabric",

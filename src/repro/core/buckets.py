@@ -172,6 +172,39 @@ def pack(
     return PackedBuckets(words=out_words, counts=counts, overflow=overflow)
 
 
+def flush_pack(
+    bucket_id: jax.Array,
+    addr: jax.Array,
+    deadline: jax.Array,
+    valid: jax.Array,
+    *,
+    slab: jax.Array,
+    capacity: int,
+    substep: int,
+    slots: str | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pack one substep's events straight into a superstep flush slab.
+
+    ``slab`` is the ``int32[n_buckets, B, capacity]`` wire-word accumulator
+    of a :class:`repro.core.pulse_comm.FlushBuffer`; event *i* of substep
+    ``substep`` lands at ``slab[bucket_i, substep, rank_i]`` in one scatter
+    — no intermediate per-step ``[n_buckets, capacity]`` slab is
+    materialized and copied.  Semantics per substep column are exactly
+    :func:`pack` (stable FIFO order, overflow drop).
+
+    Returns ``(slab, counts[n_buckets], overflow[])``.
+    """
+    n_buckets = slab.shape[0]
+    slot, counts = _slots(bucket_id, valid, n_buckets, slots)
+    keep = valid & (slot < capacity)
+    words_in = ev.encode_word(addr, deadline, keep)
+    b = jnp.where(keep, bucket_id, n_buckets)
+    s = jnp.where(keep, slot, capacity)
+    slab = slab.at[b, substep, s].set(words_in, mode="drop")
+    overflow = jnp.sum(valid & (slot >= capacity)).astype(jnp.int32)
+    return slab, counts, overflow
+
+
 def unpack(packed: PackedBuckets) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Flatten packed buckets back to decoded SoA event lanes
     [n_buckets * capacity] — (addr, deadline8, valid)."""

@@ -71,7 +71,13 @@ def deposit(
     return DelayRing(ring=ring, now=state.now), expired
 
 
-def deposit_words(state: DelayRing, words: jax.Array) -> tuple[DelayRing, jax.Array]:
+def deposit_words(
+    state: DelayRing,
+    words: jax.Array,
+    *,
+    now: jax.Array | None = None,
+    min_ahead: jax.Array | int = 0,
+) -> tuple[DelayRing, jax.Array]:
     """Scatter packed wire words into their deadline slots — the single
     decode point of the fabric hot path.  Returns (state, expired).
 
@@ -81,13 +87,25 @@ def deposit_words(state: DelayRing, words: jax.Array) -> tuple[DelayRing, jax.Ar
     PulseCommConfig guarantees for every deliverable event).  Semantics are
     identical to :func:`deposit` on the decoded lanes: deliverable iff
     ``now < deadline <= now + D``; everything else is counted expired.
+
+    ``now`` defaults to the ring clock; the superstep flush passes each
+    substep's injection clock explicitly so deferred deposits are judged
+    exactly as the per-step schedule would judge them.  ``min_ahead``
+    raises the near edge of the deliverable window (``ahead > min_ahead``):
+    a flushed word whose deadline falls inside the deferral window would
+    land in a ring slot that was already popped and ghost one full ring
+    revolution later, so such words are counted expired instead (only
+    merge-congested stragglers can hit this — fresh words are admitted
+    with more slack than the deferral).
     """
     d = state.depth
+    if now is None:
+        now = state.now
     valid = ev.word_valid(words)
-    ahead = ev.wrap8_diff(words & ev.WORD_TIME_MASK, ev.wrap8(state.now))
-    deliverable = valid & (ahead > 0) & (ahead <= d)
+    ahead = ev.wrap8_diff(words & ev.WORD_TIME_MASK, ev.wrap8(now))
+    deliverable = valid & (ahead > min_ahead) & (ahead <= d)
     expired = jnp.sum(valid & ~deliverable).astype(jnp.int32)
-    slot = jnp.where(deliverable, (state.now + ahead) % d, 0)
+    slot = jnp.where(deliverable, (now + ahead) % d, 0)
     addr = ev.word_addr(words)
     col = jnp.where(deliverable, jnp.clip(addr, 0, state.n_inputs - 1), 0)
     ring = state.ring.at[slot, col].add(deliverable.astype(jnp.int32), mode="drop")

@@ -114,6 +114,12 @@ def to_dense(events: EventBuffer, n_neurons: int) -> jax.Array:
     return dense.at[addr].add(contrib * (events.addr >= 0))
 
 
+def sentinel_words(shape: tuple[int, ...]) -> jax.Array:
+    """An all-sentinel word slab — the "no event" fill every wire-word
+    buffer (packed buckets, flush slabs, merge queues) starts from."""
+    return jnp.full(shape, WORD_SENTINEL, dtype=jnp.int32)
+
+
 def wrap8(t: jax.Array) -> jax.Array:
     """Project a full-width timestamp onto the 8-bit on-wire format."""
     return jnp.asarray(t, jnp.int32) & (TIME_MOD - 1)

@@ -210,6 +210,8 @@ class PulseFabric:
         self.cfg = cfg
         self.flow = flow
         self._binding = _resolve(cfg, transport)
+        self._jit_cache: dict[str, Callable] = {}
+        self.trace_counts: dict[str, int] = {}
         max_lat = int(getattr(self._binding.transport,
                               "max_path_latency", 0))
         if max_lat >= ev.TIME_MOD // 2:
@@ -223,6 +225,22 @@ class PulseFabric:
                 f"transport path latency {max_lat} reaches the 8-bit wrap "
                 f"half-window ({ev.TIME_MOD // 2}); a delivered word could "
                 "alias onto a future deadline")
+        if cfg.superstep > 1 and (
+                cfg.superstep + max_lat + cfg.ring_depth
+                >= ev.TIME_MOD // 2):
+            # Extends the PulseCommConfig superstep + ring_depth guard by
+            # the transport's modeled path latency: a word deferred for up
+            # to superstep-1 steps, shifted by up to max_lat on the wire
+            # and then held up to ring_depth steps in the ring must stay
+            # inside the wrap half-window end to end, or a deferred
+            # delivery could alias onto a future deadline instead of
+            # expiring with accounting.
+            raise ValueError(
+                f"superstep {cfg.superstep} + transport path latency "
+                f"{max_lat} + ring_depth {cfg.ring_depth} reaches the "
+                f"8-bit wrap half-window ({ev.TIME_MOD // 2}); a deferred "
+                "word could alias onto a future deadline — lower the "
+                "superstep or shorten the topology's paths")
 
     @property
     def transport(self) -> tp.Transport:
@@ -288,6 +306,46 @@ class PulseFabric:
                 q,
             )
         return q
+
+    # -- superstep flush slab ----------------------------------------------
+
+    def init_flushbuf(self) -> pc.FlushBuffer:
+        """Fresh (empty) superstep flush slab per chip — batched over chips
+        on the local path.  The slab is internal to :meth:`superstep` (each
+        call covers one complete B-step block), exposed for inspection and
+        tests."""
+        buf = pc.flush_init(self.cfg)
+        if self.batched:
+            buf = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.cfg.n_chips,) + x.shape),
+                buf,
+            )
+        return buf
+
+    # -- cached jitted drivers ---------------------------------------------
+
+    def _cached_jit(self, name: str, fn: Callable) -> Callable:
+        """One persistent ``jax.jit`` wrapper per driver, cached on the
+        fabric: repeated ``run``/benchmark iterations reuse the same
+        executable instead of re-tracing per call (jit's own signature
+        cache keys on input shapes/dtypes and carry structure).
+        ``trace_counts[name]`` counts actual retraces — pinned in
+        tests/test_superstep.py."""
+        if name not in self._jit_cache:
+            def traced(*args):
+                self.trace_counts[name] = self.trace_counts.get(name, 0) + 1
+                return fn(*args)
+
+            self._jit_cache[name] = jax.jit(traced)
+        return self._jit_cache[name]
+
+    def jit_step(self) -> Callable:
+        """Cached jitted :meth:`step` (positional arguments only)."""
+        return self._cached_jit("step", self.step)
+
+    def jit_superstep(self) -> Callable:
+        """Cached jitted :meth:`superstep` (positional arguments only)."""
+        return self._cached_jit("superstep", self.superstep)
 
     def _requeue(
         self, routed: rt.RoutedEvents, sendq: fc.SendQueue, now: jax.Array
@@ -366,7 +424,160 @@ class PulseFabric:
         flow, _ = fc.consume(flow, self.flow.drain_rate)
         return flow, packed, stalled, sendq
 
-    # -- the single step body ----------------------------------------------
+    # -- the single step / superstep body -----------------------------------
+
+    def _chip_superstep(
+        self,
+        events: ev.EventBuffer,
+        table: rt.RoutingTable,
+        ring: dl.DelayRing,
+        flow: fc.RingState | None,
+        merge: mg.MergeBuffer | None,
+        sendq: fc.SendQueue | None,
+    ) -> tuple[dl.DelayRing, pc.Delivered, pc.CommStats,
+               fc.RingState | None, mg.MergeBuffer | None,
+               fc.SendQueue | None]:
+        """One complete B-step superstep block for one chip (B == the
+        leading axis of ``events``; B=1 is the plain per-step schedule).
+
+        Three phases — the exchange is launched exactly ONCE per block:
+
+        1. *inject* (per substep k, clock ``t0 + k``): route, admit into
+           the wrap window with the remaining deferral as extra slack,
+           credit-gate, and flush-pack into column k of the FlushBuffer
+           slab;
+        2. *flush*: ONE fused collective moves the whole
+           ``[n_buckets, B, capacity]`` slab (one ``all_to_all`` on a
+           dense transport, one hop-forwarded batch on a routed one);
+        3. *drain* (per substep k): replay the per-step schedule at the
+           destination — merge substep k's arrivals against clock
+           ``t0 + k`` and deposit with exactly the judgment the B=1
+           schedule would have applied (``min_ahead`` guards the slots
+           popped during the deferral).
+
+        Because every admitted word carries more slack than its remaining
+        wait, delivery is bitwise-equal to B separate steps
+        (tests/test_superstep.py); the returned ``delivered`` / ``stats``
+        carry a leading substep axis and ``ring.now`` is left at ``t0``
+        (the caller owns the clock, exactly as for :meth:`step`).
+        """
+        cfg = self.cfg
+        b = events.addr.shape[0]
+        t0 = ring.now
+        flushbuf = pc.flush_init(cfg)
+        inject_stats = []
+
+        for k in range(b):
+            now_k = t0 + k
+            defer_k = (b - 1) - k
+            events_k = jax.tree.map(lambda x: x[k], events)
+            routed = rt.route(events_k, table)
+            # ``sent`` counts each substep's fresh stream only — a queued
+            # event was counted when first offered, so run-level
+            # conservation reads
+            #   Σ sent == ring + expired + overflow + merge_dropped
+            #             + stalled + final queue occupancies.
+            sent = jnp.sum(routed.valid.astype(jnp.int32))
+            if self.sendq_enabled:
+                routed = self._requeue(routed, sendq, now_k)
+            # Enforce the 8-bit wrap contract at the injection boundary:
+            # only deadlines strictly inside the future half-window
+            # (defer < diff < 128) ride the wire word.  Later deadlines
+            # would alias onto near ones and deposit ghost spikes 256
+            # steps early; deadlines at or below the remaining deferral
+            # (diff <= defer; defer == 0 for B=1, restoring the plain
+            # diff > 0 window) would reach the ring only after their slot
+            # was popped — undeliverable under the deferred exchange, so
+            # they are dropped here with the same ``expired`` accounting
+            # the pre-word path used, without ever touching the wire.
+            diff = routed.deadline - now_k
+            in_window = (diff > defer_k) & (diff < ev.TIME_MOD // 2)
+            wrap_expired = jnp.sum(
+                routed.valid & ~in_window).astype(jnp.int32)
+            routed = routed._replace(valid=routed.valid & in_window)
+            flushbuf, counts, overflow, traffic = pc.aggregate_into(
+                cfg, routed, flushbuf, k)
+
+            stalled = jnp.int32(0)
+            if self.flow is not None:
+                view = bk.PackedBuckets(
+                    words=flushbuf.slab[:, k, :], counts=counts,
+                    overflow=overflow)
+                flow, view, stalled, sendq = self._gate(flow, view)
+                flushbuf = flushbuf._replace(
+                    slab=flushbuf.slab.at[:, k, :].set(view.words))
+                counts = view.counts
+
+            n_packets = jnp.sum((counts > 0).astype(jnp.int32))
+            fill = jnp.minimum(counts, cfg.bucket_capacity)
+            wire = (n_packets * pc.HEADER_BYTES
+                    + jnp.sum(fill) * pc.EVENT_BYTES)
+            inject_stats.append(dict(
+                sent=sent, overflow=overflow, stalled=stalled,
+                wrap_expired=wrap_expired, traffic=traffic,
+                wire_bytes=wire.astype(jnp.int32),
+                utilization=(fill.astype(jnp.float32).mean()
+                             / float(cfg.bucket_capacity)),
+            ))
+
+        delivered_words, link = pc.exchange_flush(
+            cfg, self.transport, flushbuf.slab)
+
+        merge_out = None
+        merge_dropped = jnp.zeros((b,), jnp.int32)
+        if cfg.mode == "full" and self.merge_enabled:
+            # Stateful rate-limited merge: the B-step batch drains through
+            # the persistent queue with per-step emission against each
+            # substep's clock — congested events are *delayed to later
+            # steps*, not destroyed, and only queue overflow beyond
+            # merge_depth drops (counted per substep in merge_dropped), so
+            # delivered == emitted + queued + dropped holds every substep
+            # by construction.  The sort key comes straight from the low
+            # bits of the words — no decode on the hot path.
+            merge, merge_out, merge_dropped = mg.merge_drain_words(
+                merge, delivered_words, now0=t0, rate=cfg.merge_rate,
+                use_pallas=cfg.use_pallas,
+            )
+
+        out_words, stats_steps = [], []
+        for k in range(b):
+            now_k = t0 + k
+            defer_k = (b - 1) - k
+            if merge_out is not None:
+                words_k = merge_out[k]
+            elif cfg.mode == "full":
+                words_k = mg.merge_words(delivered_words[k], now_k)
+            else:
+                words_k = delivered_words[k]
+            ring, dep_expired = dl.deposit_words(
+                ring, words_k, now=now_k, min_ahead=defer_k)
+            out_words.append(words_k)
+            inj = inject_stats[k]
+            last = k == b - 1
+            stats_steps.append(pc.CommStats(
+                sent=inj["sent"],
+                overflow=inj["overflow"],
+                merge_dropped=jnp.asarray(merge_dropped[k], jnp.int32),
+                expired=inj["wrap_expired"] + dep_expired,
+                stalled=inj["stalled"],
+                utilization=inj["utilization"],
+                wire_bytes=inj["wire_bytes"],
+                traffic=inj["traffic"],
+                # The collective fires once per block: its link occupancy
+                # is attributed to the flush substep (zeros elsewhere).
+                # Per-block link_words totals match the per-step schedule
+                # exactly; link_backlog is judged at block granularity (B
+                # rounds of capacity — deferral smooths per-step bursts,
+                # so it is <= the per-step schedule's total).
+                link_words=link.words if last else jnp.zeros_like(
+                    link.words),
+                link_backlog=link.backlog if last else jnp.zeros_like(
+                    link.backlog),
+            ))
+
+        delivered = pc.Delivered(words=jnp.stack(out_words))
+        stats = jax.tree.map(lambda *xs: jnp.stack(xs), *stats_steps)
+        return ring, delivered, stats, flow, merge, sendq
 
     def _chip_step(
         self,
@@ -379,75 +590,14 @@ class PulseFabric:
     ) -> tuple[dl.DelayRing, pc.Delivered, pc.CommStats,
                fc.RingState | None, mg.MergeBuffer | None,
                fc.SendQueue | None]:
-        cfg = self.cfg
-        routed = rt.route(events, table)
-        # ``sent`` counts this step's fresh stream only — a queued event
-        # was counted when first offered, so run-level conservation reads
-        #   Σ sent == ring + expired + overflow + merge_dropped + stalled
-        #             + final queue occupancies.
-        sent = jnp.sum(routed.valid.astype(jnp.int32))
-        if self.sendq_enabled:
-            routed = self._requeue(routed, sendq, ring.now)
-        # Enforce the 8-bit wrap contract at the injection boundary: only
-        # deadlines strictly inside the future half-window (0 < diff < 128)
-        # ride the wire word.  Later deadlines would alias onto near ones
-        # and deposit ghost spikes 256 steps early; already-expired ones
-        # (diff <= 0) are undeliverable anyway, and admitting them would let
-        # a word age past the wrap inside the merge queue (the merge_depth
-        # <= 128 * merge_rate bound assumes words enter with diff > 0).
-        # The pre-word path counted all of these expired at the ring;
-        # dropping them here keeps that accounting (sent still counts them,
-        # expired absorbs them) without ever putting them on the wire.
-        diff = routed.deadline - ring.now
-        in_window = (diff > 0) & (diff < ev.TIME_MOD // 2)
-        wrap_expired = jnp.sum(routed.valid & ~in_window).astype(jnp.int32)
-        routed = routed._replace(valid=routed.valid & in_window)
-        packed, traffic = pc.aggregate(cfg, routed)
-
-        stalled = jnp.int32(0)
-        if self.flow is not None:
-            flow, packed, stalled, sendq = self._gate(flow, packed)
-
-        delivered, link = pc.exchange_with_stats(cfg, self.transport, packed)
-
-        merge_dropped = jnp.int32(0)
-        if cfg.mode == "full":
-            if self.merge_enabled:
-                # Stateful rate-limited merge: the delivered word stream is
-                # enqueued into the persistent per-chip queue and the
-                # merge_rate earliest-deadline events are emitted; congested
-                # events are *delayed to later steps*, not destroyed.  Only
-                # queue overflow beyond merge_depth is dropped, counted in
-                # merge_dropped, so delivered == emitted + queued + dropped
-                # holds every step by construction.  The sort key comes
-                # straight from the low bits of the words (relative to the
-                # ring clock) — no decode on the hot path.
-                merge, out_words, merge_dropped = mg.merge_step_words(
-                    merge, delivered.words, now=ring.now,
-                    rate=cfg.merge_rate, use_pallas=cfg.use_pallas,
-                )
-                delivered = pc.Delivered(words=out_words)
-            else:
-                delivered = pc.merge_delivered(cfg, delivered, ring.now)
-
-        new_ring, expired = dl.deposit_words(ring, delivered.words)
-        expired = expired + wrap_expired
-        n_packets = jnp.sum((packed.counts > 0).astype(jnp.int32))
-        payload = jnp.sum(jnp.minimum(packed.counts, cfg.bucket_capacity))
-        wire = n_packets * pc.HEADER_BYTES + payload * pc.EVENT_BYTES
-        stats = pc.CommStats(
-            sent=sent,
-            overflow=packed.overflow,
-            merge_dropped=jnp.asarray(merge_dropped, jnp.int32),
-            expired=expired,
-            stalled=stalled,
-            utilization=packed.utilization(),
-            wire_bytes=wire.astype(jnp.int32),
-            traffic=traffic,
-            link_words=link.words,
-            link_backlog=link.backlog,
+        """The per-step body: a superstep block of exactly one substep."""
+        out = self._chip_superstep(
+            jax.tree.map(lambda x: x[None], events), table, ring,
+            flow, merge, sendq,
         )
-        return new_ring, delivered, stats, flow, merge, sendq
+        ring, delivered, stats, flow, merge, sendq = out
+        squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
+        return ring, squeeze(delivered), squeeze(stats), flow, merge, sendq
 
     # -- public API ---------------------------------------------------------
 
@@ -472,13 +622,18 @@ class PulseFabric:
         ``flow.retransmit_depth > 0``; pass the previous step's
         ``FabricResult.flow`` / ``.merge`` / ``.sendq`` (auto-initialized
         on first use if omitted).
+
+        With ``cfg.superstep > 1`` the exchange schedule is defined over
+        whole B-step blocks, not single steps — drive the fabric through
+        :meth:`superstep` (this method raises).
         """
-        if self.flow is not None and flow is None:
-            flow = self.init_flow()
-        if self.merge_enabled and merge is None:
-            merge = self.init_merge()
-        if self.sendq_enabled and sendq is None:
-            sendq = self.init_sendq()
+        if self.cfg.superstep != 1:
+            raise ValueError(
+                f"cfg.superstep={self.cfg.superstep}: the exchange is "
+                "batched over whole B-step blocks, so per-step driving is "
+                "undefined — call superstep(events[B, ...], ...) (or "
+                "snn.network.run, which blocks the scan automatically)")
+        flow, merge, sendq = self._init_missing(flow, merge, sendq)
         if self.batched:
             ring, delivered, stats, flow, merge, sendq = jax.vmap(
                 self._chip_step, axis_name=LOCAL_AXIS
@@ -487,5 +642,61 @@ class PulseFabric:
             ring, delivered, stats, flow, merge, sendq = self._chip_step(
                 events, table, ring, flow, merge, sendq
             )
+        return FabricResult(ring=ring, delivered=delivered, stats=stats,
+                            flow=flow, merge=merge, sendq=sendq)
+
+    def _init_missing(self, flow, merge, sendq):
+        if self.flow is not None and flow is None:
+            flow = self.init_flow()
+        if self.merge_enabled and merge is None:
+            merge = self.init_merge()
+        if self.sendq_enabled and sendq is None:
+            sendq = self.init_sendq()
+        return flow, merge, sendq
+
+    def superstep(
+        self,
+        events: ev.EventBuffer,
+        table: rt.RoutingTable,
+        ring: dl.DelayRing,
+        flow: fc.RingState | None = None,
+        merge: mg.MergeBuffer | None = None,
+        sendq: fc.SendQueue | None = None,
+    ) -> FabricResult:
+        """One B-step superstep block: B injections, ONE collective.
+
+        ``events`` carries a leading substep axis of size
+        ``cfg.superstep``: local path ``[B, n_chips, E]``, shard path
+        ``[B, E]``.  Substep k runs at clock ``ring.now + k`` — the caller
+        advances ``ring.now`` by B afterwards, exactly as it ticks once
+        after :meth:`step` (``snn.network`` does this when restructuring
+        its scan over blocks).  The returned ``delivered`` and ``stats``
+        carry the same leading [B] axis (local: ``[B, n_chips, ...]``);
+        carries (``flow`` / ``merge`` / ``sendq``) thread across blocks
+        like they do across steps.
+
+        Collective launches per simulated step drop from 1 to 1/B
+        (HLO-pinned in tests/test_superstep.py); delivery stays
+        bitwise-equal to the B=1 schedule because admission only puts
+        events on the wire with more slack than their remaining deferral
+        (see :meth:`_chip_superstep`).  Works for any ``cfg.superstep``
+        including 1.
+        """
+        b = events.addr.shape[0]
+        if b != self.cfg.superstep:
+            raise ValueError(
+                f"events carry {b} substeps, cfg.superstep is "
+                f"{self.cfg.superstep}")
+        flow, merge, sendq = self._init_missing(flow, merge, sendq)
+        if self.batched:
+            ring, delivered, stats, flow, merge, sendq = jax.vmap(
+                self._chip_superstep, axis_name=LOCAL_AXIS,
+                in_axes=(1, 0, 0, 0, 0, 0),
+                out_axes=(0, 1, 1, 0, 0, 0),
+            )(events, table, ring, flow, merge, sendq)
+        else:
+            ring, delivered, stats, flow, merge, sendq = (
+                self._chip_superstep(events, table, ring, flow, merge,
+                                     sendq))
         return FabricResult(ring=ring, delivered=delivered, stats=stats,
                             flow=flow, merge=merge, sendq=sendq)

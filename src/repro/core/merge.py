@@ -168,6 +168,41 @@ def merge_step_words(
     return MergeBuffer(words=new_words), out_words, dropped
 
 
+def merge_drain_words(
+    buf: MergeBuffer,
+    in_words: jax.Array,
+    *,
+    now0: jax.Array,
+    rate: int,
+    use_pallas: bool = False,
+) -> tuple[MergeBuffer, jax.Array, jax.Array]:
+    """Drain a B-step superstep batch through the rate-limited queue with
+    per-step emission.
+
+    ``in_words`` is ``int32[B, lanes]`` — the delivered word stream of each
+    substep of one flush, substep k judged at clock ``now0 + k``.  The
+    queue replays exactly the per-step schedule: enqueue substep k's
+    arrivals, emit the ``rate`` earliest-deadline words against that
+    substep's clock, carry the queue to substep k+1.  Queue contents,
+    emission streams and drop counts are therefore bitwise-identical to B
+    separate :func:`merge_step_words` calls — which is what pins the
+    superstep fabric to the B=1 schedule (tests/test_superstep.py).
+
+    Returns ``(new_buf, out_words[B, rate], dropped[B])``.  The loop is
+    unrolled (B is a small static superstep factor), keeping the bitonic
+    ``use_pallas`` sort usable with static shapes.
+    """
+    outs, drops = [], []
+    for k in range(in_words.shape[0]):
+        buf, out_k, dropped_k = merge_step_words(
+            buf, in_words[k], now=now0 + k, rate=rate,
+            use_pallas=use_pallas,
+        )
+        outs.append(out_k)
+        drops.append(dropped_k)
+    return buf, jnp.stack(outs), jnp.stack(drops)
+
+
 def merge_step(
     buf: MergeBuffer,
     in_addr: jax.Array,

@@ -66,10 +66,30 @@ class PulseCommConfig:
     merge_depth: int = 64             # full mode: merge-queue depth
     time_window: int = 4              # full mode: renaming window (steps)
     use_pallas: bool = False          # bucket_pack kernel vs jnp reference
+    superstep: int = 1                # B: sim steps batched per exchange
 
     def __post_init__(self):
         if self.mode not in ("simplified", "full"):
             raise ValueError(f"unknown mode {self.mode!r}")
+        if self.superstep < 1:
+            raise ValueError(
+                f"superstep {self.superstep} must be >= 1 (1 = one "
+                "exchange per simulated step, the unbatched schedule)")
+        if self.superstep > 1 and (
+                self.superstep + self.ring_depth >= ev.TIME_MOD // 2):
+            # A flushed word is deferred up to superstep-1 steps and must
+            # still land inside the ring horizon, so the useful deadline
+            # range spans superstep + ring_depth steps of the 8-bit wire
+            # timestamp.  Past the wrap half-window a deferred word could
+            # alias onto a future deadline instead of expiring — same
+            # contract as the ring_depth bound below, extended by the
+            # deferral (the fabric additionally adds the transport's path
+            # latency to this bound).
+            raise ValueError(
+                f"superstep {self.superstep} + ring_depth "
+                f"{self.ring_depth} reaches the 8-bit wrap half-window "
+                f"({ev.TIME_MOD // 2}); a deferred word could alias onto "
+                "a future deadline")
         if self.neurons_per_chip > (1 << ev.ADDR_BITS):
             raise ValueError("neuron address exceeds 14-bit event format")
         if self.n_inputs_per_chip > (1 << ev.ADDR_BITS):
@@ -189,11 +209,128 @@ def aggregate(cfg: PulseCommConfig, routed: rt.RoutedEvents) -> tuple[bk.PackedB
     return packed, traffic
 
 
+class FlushBuffer(NamedTuple):
+    """Per-chip superstep exchange accumulator (the flush-slab carry).
+
+    With ``cfg.superstep = B > 1`` the fabric defers the network exchange:
+    each simulated step packs its admitted events into one column of this
+    slab, and only when all B columns are filled does ONE fused collective
+    move the whole block (see :meth:`repro.core.fabric.PulseFabric.
+    superstep`).  The delay-ring slack window funds the deferral — events
+    are admitted only with more slack than their remaining wait, so a
+    flushed word is never stale on arrival.
+
+    slab  : int32[n_buckets, B, capacity] packed wire words
+            (``events.WORD_SENTINEL`` = empty); column k holds substep k's
+            packets for the current block.
+    phase : int32[] substeps accumulated so far (0..B; B = ready to flush).
+    """
+
+    slab: jax.Array
+    phase: jax.Array
+
+    @property
+    def superstep(self) -> int:
+        return self.slab.shape[-2]
+
+    def occupancy(self) -> jax.Array:
+        return jnp.sum(ev.word_valid(self.slab).astype(jnp.int32),
+                       axis=(-3, -2, -1))
+
+
+def flush_init(cfg: PulseCommConfig) -> FlushBuffer:
+    """An empty flush slab for one chip (``cfg.superstep`` columns)."""
+    return FlushBuffer(
+        slab=ev.sentinel_words(
+            (cfg.n_buckets, cfg.superstep, cfg.bucket_capacity)),
+        phase=jnp.asarray(0, jnp.int32),
+    )
+
+
+def aggregate_into(
+    cfg: PulseCommConfig,
+    routed: rt.RoutedEvents,
+    flushbuf: FlushBuffer,
+    substep: int,
+) -> tuple[FlushBuffer, jax.Array, jax.Array, jax.Array]:
+    """Stage 1-2 at the source, fused into the superstep flush slab.
+
+    Like :func:`aggregate`, but the packed words scatter directly into
+    column ``substep`` of the flush slab — no per-step intermediate slab.
+    Returns ``(flushbuf, counts[n_buckets], overflow, traffic[n_chips])``.
+    """
+    if cfg.mode == "simplified":
+        bucket_id = bk.static_bucket_ids(
+            routed.dest_chip, n_chips=cfg.n_chips,
+            streams=cfg.buckets_per_chip)
+    else:
+        bucket_id = bk.dynamic_bucket_ids(
+            routed.dest_chip, routed.deadline,
+            n_chips=cfg.n_chips, pool_per_chip=cfg.buckets_per_chip,
+            window=cfg.time_window,
+        )
+    if cfg.use_pallas:
+        from repro.kernels.bucket_pack import ops as bp_ops
+
+        slab, counts, overflow = bp_ops.flush_pack(
+            bucket_id, routed.dest_addr, routed.deadline, routed.valid,
+            slab=flushbuf.slab, capacity=cfg.bucket_capacity,
+            substep=substep,
+        )
+    else:
+        slab, counts, overflow = bk.flush_pack(
+            bucket_id, routed.dest_addr, routed.deadline, routed.valid,
+            slab=flushbuf.slab, capacity=cfg.bucket_capacity,
+            substep=substep,
+        )
+    traffic = tp.exchange_matrix(routed.dest_chip, routed.valid, cfg.n_chips)
+    flushbuf = FlushBuffer(slab=slab, phase=jnp.asarray(substep + 1,
+                                                       jnp.int32))
+    return flushbuf, counts, overflow, traffic
+
+
 class LinkStats(NamedTuple):
     """Per-port link accounting for one exchange (see ``CommStats``)."""
 
     words: jax.Array     # int32[n_ports]
     backlog: jax.Array   # int32[n_ports]
+
+
+def exchange_flush(
+    cfg: PulseCommConfig, transport: tp.Transport, slab: jax.Array
+) -> tuple[jax.Array, LinkStats]:
+    """Stage 3 on a whole superstep block: ONE collective for B steps.
+
+    ``slab`` is the filled ``int32[n_buckets, B, capacity]`` flush slab.
+    The exchange runs on the ``[n_chips, buckets_per_chip, B * capacity]``
+    layout — a single fused ``all_to_all`` on a dense transport, or one
+    hop-forwarded batch (``ppermute`` round-set) on a routed topology,
+    either way amortizing the per-collective launch cost over B simulated
+    steps.  Substep identity is preserved: the returned words are
+    ``int32[B, lanes_in]``, substep k carrying exactly what B separate
+    exchanges would have delivered at that step (latency shifts included),
+    which is what keeps the superstep schedule bitwise-equal to B=1.
+    """
+    b = slab.shape[1]
+    shape = (cfg.n_chips, cfg.buckets_per_chip, b, cfg.bucket_capacity)
+    block = slab.reshape(shape)
+    if hasattr(transport, "exchange_words"):
+        if b > 1 and hasattr(transport, "with_flush_rounds"):
+            # The block carries B steps of payload and the link has B
+            # steps to drain it: judge backlog against B rounds of
+            # capacity (word counts are unaffected).
+            transport = transport.with_flush_rounds(b)
+        words, link_words, link_backlog = transport.exchange_words(block)
+    else:
+        words = transport.all_to_all(block)
+        own = jnp.take(block, transport.chip_index(), axis=0)
+        off_chip = (jnp.sum(ev.word_valid(block).astype(jnp.int32))
+                    - jnp.sum(ev.word_valid(own).astype(jnp.int32)))
+        link_words = off_chip[None]
+        link_backlog = jnp.zeros((1,), jnp.int32)
+    # [n_chips(src), bpc, B, C] -> [B, n_chips * bpc * C] per substep
+    out = jnp.moveaxis(words, 2, 0).reshape(b, cfg.lanes_in)
+    return out, LinkStats(words=link_words, backlog=link_backlog)
 
 
 def exchange_with_stats(

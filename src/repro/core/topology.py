@@ -345,6 +345,11 @@ class RoutedTransport:
     topology: Topology
     axis: str
     apply_latency: bool = True
+    # Rounds of per-link capacity one exchange may consume: a superstep
+    # flush moves B steps of payload in one round-set, and the link has B
+    # steps of wall-clock to drain it, so backlog is judged against
+    # B * link_capacity (see with_flush_rounds).
+    flush_rounds: int = 1
 
     def __post_init__(self):
         if not isinstance(self.axis, str):
@@ -397,6 +402,14 @@ class RoutedTransport:
         counts the words this chip drove over each of its ports and
         ``link_backlog`` the words in excess of the per-round link capacity
         (0 when bandwidth/credits are unbounded).
+
+        The trailing dims are free, so a superstep flush slab
+        (``[n_chips, buckets_per_chip, B, capacity]`` — see
+        :func:`repro.core.pulse_comm.exchange_flush`) forwards through the
+        same hop schedule as B separate exchanges while paying each
+        ``ppermute`` round's launch cost ONCE per block: the per-hop relay
+        buffers simply carry B steps of payload, so the collective launch
+        rate on every link drops to 1/B per simulated step.
         """
         topo = self.topology
         n = topo.n_chips
@@ -423,8 +436,15 @@ class RoutedTransport:
             y = _shift_word_time(y, dt.reshape((n,) + (1,) * (y.ndim - 1)))
         return y, jnp.stack(words), jnp.stack(backlog)
 
+    def with_flush_rounds(self, rounds: int) -> "RoutedTransport":
+        """The same transport judging backlog at block granularity: one
+        superstep flush of B steps may use B rounds of every link's
+        capacity (``pulse_comm.exchange_flush`` binds this).  Word counts
+        are unaffected — only the backlog threshold scales."""
+        return dataclasses.replace(self, flush_rounds=rounds)
+
     def _excess(self, sent: jax.Array) -> jax.Array:
-        cap = self.topology.link_capacity
+        cap = self.topology.link_capacity * self.flush_rounds
         if not cap:
             return jnp.int32(0)
         return jnp.maximum(sent - cap, 0).astype(jnp.int32)

@@ -1,4 +1,4 @@
 from repro.kernels.bucket_pack import ops, ref
-from repro.kernels.bucket_pack.ops import bucket_pack
+from repro.kernels.bucket_pack.ops import bucket_pack, flush_pack
 
-__all__ = ["ops", "ref", "bucket_pack"]
+__all__ = ["ops", "ref", "bucket_pack", "flush_pack"]

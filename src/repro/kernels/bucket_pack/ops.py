@@ -52,3 +52,34 @@ def bucket_pack(
         counts=counts[:, 0],
         overflow=jnp.sum(overflow).astype(jnp.int32),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "substep",
+                                             "interpret"))
+def flush_pack(
+    bucket_id: jax.Array,
+    addr: jax.Array,
+    deadline: jax.Array,
+    valid: jax.Array,
+    *,
+    slab: jax.Array,
+    capacity: int,
+    substep: int,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Kernel-backed superstep flush-pack (see
+    :func:`repro.core.buckets.flush_pack` for the reference semantics).
+
+    The Pallas kernel materializes the substep's packed bucket rows with
+    its single-word VPU accumulator; the rows then land in the
+    ``[n_buckets, B, capacity]`` flush slab as one strided store into the
+    ``substep`` column (``substep`` is static — the fabric unrolls the
+    superstep inject loop, so each write lowers to a fixed-offset update
+    of the carried slab).  Returns ``(slab, counts, overflow)``.
+    """
+    packed = bucket_pack(
+        bucket_id, addr, deadline, valid,
+        n_buckets=slab.shape[0], capacity=capacity, interpret=interpret,
+    )
+    slab = slab.at[:, substep, :].set(packed.words)
+    return slab, packed.counts, packed.overflow

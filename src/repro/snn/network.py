@@ -280,6 +280,86 @@ def _step_impl(
     return new_state, rec, new_w, new_stdp
 
 
+def _superstep_active(cfg: NetworkConfig) -> bool:
+    """True when the scan must be restructured over B-step blocks."""
+    return cfg.comm.superstep > 1 and cfg.comm_mode == "event"
+
+
+def _block_impl(
+    cfg: NetworkConfig,
+    fabric: fb.PulseFabric,
+    table: rt.RoutingTable,
+    neuron_params: Any,
+    w: jax.Array,
+    state: NetworkState,
+    ext_block: jax.Array,          # [B, ...] one superstep of inputs
+    *,
+    stdp_cfg=None,
+    stdp_state=None,
+):
+    """One B-step superstep block — the blocked counterpart of
+    :func:`_step_impl`, shared by :func:`run`, :func:`run_plastic` and
+    :func:`shard_superstep` when ``cfg.comm.superstep > 1``.
+
+    Phase 1 scans the B substeps of [pop ring, dynamics, (STDP), spikes →
+    events] — no fabric call, so no collective.  Phase 2 hands the whole
+    event block to :meth:`PulseFabric.superstep`: ONE fused exchange for
+    the block, then per-substep merge/deposit against each substep's
+    clock.  This is sound because admission guarantees no event injected
+    inside the block can have a deadline inside it (slack > remaining
+    deferral), so the phase-1 pops can never depend on phase-2 deposits —
+    delivered spike trains stay bitwise-equal to the per-step schedule
+    (tests/test_superstep.py).
+
+    Returns (new_state, record with leading [B] axis, new_w, new_stdp).
+    """
+    c = cfg.comm
+    B = c.superstep
+    nstep, _ = _neuron_fns(cfg)
+    vm = jax.vmap if fabric.batched else (lambda f: f)
+
+    def substep(carry, ext):
+        nstate, ring, t, w_, stdp_ = carry
+        ring, in_spikes = vm(dl.pop_current)(ring)
+        total_in = in_spikes.astype(jnp.float32) + ext
+        currents = vm(sy.currents)(sy.Crossbar(w=w_), total_in)
+        nstate, spikes = vm(nstep)(nstate, currents, neuron_params)
+        new_stdp, new_w = stdp_, w_
+        if stdp_cfg is not None:
+            from repro.snn import stdp as stdp_mod
+
+            new_stdp, new_w = vm(
+                lambda s, pre, post, ww: stdp_mod.step(stdp_cfg, s, pre,
+                                                       post, ww)
+            )(stdp_, total_in, spikes, w_)
+        ebs = vm(lambda s: ev.from_spikes(s > 0.5, t, c.event_capacity)[0])(
+            spikes)
+        ring = vm(dl.tick)(ring)
+        voltage = (nstate.v if cfg.record_voltage
+                   else jnp.zeros_like(nstate.v))
+        return (nstate, ring, t + 1, new_w, new_stdp), (ebs, spikes, voltage)
+
+    carry0 = (state.neuron, state.ring, state.t, w, stdp_state)
+    (nstate, ring, _, new_w, new_stdp), (ebs, spikes, voltage) = \
+        jax.lax.scan(substep, carry0, ext_block)
+
+    # Flush the block through the fabric at the block-start clock (the
+    # phase-1 ticks advanced ``now`` by B; substep k is judged at t0 + k).
+    # Missing carries are auto-initialized by superstep itself and come
+    # back in the result (run()'s _ensure_carries keeps the scan carry
+    # structure fixed across iterations).
+    res = fabric.superstep(
+        ebs, table, dl.DelayRing(ring=ring.ring, now=ring.now - B),
+        state.flow, state.merge, state.sendq)
+    ring = dl.DelayRing(ring=res.ring.ring, now=res.ring.now + B)
+
+    new_state = NetworkState(neuron=nstate, ring=ring, t=state.t + B,
+                             flow=res.flow, merge=res.merge,
+                             sendq=res.sendq)
+    rec = StepRecord(spikes=spikes, voltage=voltage, stats=res.stats)
+    return new_state, rec, new_w, new_stdp
+
+
 # ---------------------------------------------------------------------------
 # Single-device multi-chip forms (leading chip axis)
 # ---------------------------------------------------------------------------
@@ -290,6 +370,11 @@ def step(
     state: NetworkState,
     ext_input: jax.Array,         # [n_chips, n_inputs] spike counts / rates
 ) -> tuple[NetworkState, StepRecord]:
+    if _superstep_active(cfg):
+        raise ValueError(
+            f"comm.superstep={cfg.comm.superstep} batches the exchange "
+            "over B-step blocks — drive the network with run() (scans "
+            "whole blocks) instead of single step() calls")
     new_state, rec, _, _ = _step_impl(
         cfg, local_fabric(cfg), params.table, params.neuron,
         params.crossbar.w, state, ext_input,
@@ -309,15 +394,50 @@ def _ensure_carries(fabric: fb.PulseFabric, state: NetworkState) -> NetworkState
     return state
 
 
+def _blocked_inputs(cfg: NetworkConfig, ext_inputs: jax.Array) -> jax.Array:
+    """Reshape [T, ...] inputs into [T // B, B, ...] superstep blocks."""
+    B = cfg.comm.superstep
+    T = ext_inputs.shape[0]
+    if T % B:
+        raise ValueError(
+            f"run length T={T} must be a multiple of comm.superstep={B} "
+            "(the exchange schedule is defined over whole blocks)")
+    return ext_inputs.reshape((T // B, B) + ext_inputs.shape[1:])
+
+
 def run(
     cfg: NetworkConfig,
     params: NetworkParams,
     state: NetworkState,
     ext_inputs: jax.Array,        # [T, n_chips, n_inputs]
 ) -> tuple[NetworkState, StepRecord]:
-    """Scan the network over T steps; records stacked along time."""
+    """Scan the network over T steps; records stacked along time.
+
+    With ``comm.superstep = B > 1`` (event mode) the scan is restructured
+    over T/B superstep blocks — one fused exchange per block instead of
+    one per step — and T must be a multiple of B.  Records keep their
+    per-step [T, ...] shape either way, and the delivered spike trains are
+    bitwise-equal to the B=1 schedule whenever axonal delays exceed
+    ``B + path_latency`` (tests/test_superstep.py).
+    """
     fabric = local_fabric(cfg)
     state = _ensure_carries(fabric, state)
+
+    if _superstep_active(cfg):
+        blocks = _blocked_inputs(cfg, ext_inputs)
+
+        def block_body(carry, ext_block):
+            new_state, rec, _, _ = _block_impl(
+                cfg, fabric, params.table, params.neuron,
+                params.crossbar.w, carry, ext_block,
+            )
+            return new_state, rec
+
+        final, recs = jax.lax.scan(block_body, state, blocks)
+        rec = jax.tree.map(
+            lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
+            recs)
+        return final, rec
 
     def body(carry, ext):
         new_state, rec, _, _ = _step_impl(
@@ -348,6 +468,25 @@ def run_plastic(
         jnp.arange(c.n_chips))
     fabric = local_fabric(cfg)
     state = _ensure_carries(fabric, state)
+
+    if _superstep_active(cfg):
+        blocks = _blocked_inputs(cfg, ext_inputs)
+
+        def block_body(carry, ext_block):
+            net_state, w, st = carry
+            new_state, rec, w, st = _block_impl(
+                cfg, fabric, params.table, params.neuron, w, net_state,
+                ext_block, stdp_cfg=scfg, stdp_state=st,
+            )
+            return (new_state, w, st), rec
+
+        (final_state, w_final, s_final), recs = jax.lax.scan(
+            block_body, (state, params.crossbar.w, sstate), blocks)
+        rec = jax.tree.map(
+            lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
+            recs)
+        final_params = params._replace(crossbar=sy.Crossbar(w=w_final))
+        return final_params, final_state, rec, s_final
 
     def body(carry, ext):
         net_state, w, st = carry
@@ -381,9 +520,38 @@ def shard_step(
     Credit state (when ``cfg.flow`` is set) rides in ``state.flow`` and the
     merge queue (full mode, merge_rate > 0) in ``state.merge`` — thread the
     returned state back in, exactly as for :func:`step`.
+
+    With ``comm.superstep > 1`` use :func:`shard_superstep` (the exchange
+    schedule is defined over whole blocks).
     """
+    if _superstep_active(cfg):
+        raise ValueError(
+            f"comm.superstep={cfg.comm.superstep} batches the exchange "
+            "over B-step blocks — call shard_superstep(cfg, axis, params, "
+            "state, ext_block[B, n_inputs]) instead")
     new_state, rec, _, _ = _step_impl(
         cfg, shard_fabric(cfg, axis), params.table, params.neuron,
         params.crossbar.w, state, ext_input,
+    )
+    return new_state, rec
+
+
+def shard_superstep(
+    cfg: NetworkConfig,
+    axis: str | tuple[str, ...],
+    params: NetworkParams,        # shard-local: no chip axis
+    state: NetworkState,
+    ext_block: jax.Array,         # [B, n_inputs]
+) -> tuple[NetworkState, StepRecord]:
+    """Per-shard superstep block — call inside shard_map over ``axis``.
+
+    The blocked counterpart of :func:`shard_step`: B substeps of neuron
+    dynamics, then ONE fused exchange for the whole block (the collective
+    launch rate on the ICI drops to 1/B per simulated step).  Records
+    carry a leading [B] substep axis.
+    """
+    new_state, rec, _, _ = _block_impl(
+        cfg, shard_fabric(cfg, axis), params.table, params.neuron,
+        params.crossbar.w, state, ext_block,
     )
     return new_state, rec
