@@ -122,7 +122,8 @@ def _soa_reference_step(cfg, counter: dict):
                 jnp.float32).mean(axis=-1) / cfg.bucket_capacity,
             wire_bytes=wire.astype(jnp.int32), traffic=traffic,
             link_words=jnp.zeros((cfg.n_chips, 1), jnp.int32),
-            link_backlog=jnp.zeros((cfg.n_chips, 1), jnp.int32))
+            link_backlog=jnp.zeros((cfg.n_chips, 1), jnp.int32),
+            lost_to_failure=jnp.zeros_like(sent))
         return new_rings, stats
 
     return step

@@ -53,6 +53,8 @@ GATED_PREFIXES = (
     "aggregation_capacity_",
     "topology_",
     "superstep_B",
+    "resilience_",
+    "pod_",
 )
 
 # Rows faster than this are dominated by timer/dispatch noise on CI

@@ -1,0 +1,189 @@
+"""Benchmark: resilience + pod-scale fabric.
+
+Five rows tracked across PRs in BENCH_fabric.json:
+
+  resilience_baseline_*       — healthy routed fabric step (the cost the
+                                degraded path is measured against);
+  resilience_degraded_*       — same load with one chip dead: the
+                                cube-relay degraded executor plus the
+                                lost_to_failure culling (derived carries
+                                the lost-word count — the price of
+                                surviving the failure);
+  resilience_recompile_*      — cold route recompilation around a dead
+                                chip (the recovery boundary's synchronous
+                                work: BFS detours + plan rebuild, caches
+                                cleared);
+  resilience_recovery_drill   — end-to-end kill-a-chip recovery on a tiny
+                                network (untimed per-call; derived carries
+                                steps-to-resume and wall clock);
+  pod_fabric_*                — two-level pod composition (dense
+                                intra-pod tier + routed pod graph) as one
+                                fabric step.
+
+Row names are stable between --smoke and full runs (the committed
+baseline contract); smoke only trims timing reps.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.aggregation import time_loop
+from repro.core import delays as dl
+from repro.core import events as ev
+from repro.core import pulse_comm as pc
+from repro.core import routing as rt
+from repro.core import topology as tpo
+from repro.core.fabric import PulseFabric
+
+
+def _load(n_chips, n_neurons, rate, seed=0):
+    key = jax.random.PRNGKey(seed)
+    cfg = pc.PulseCommConfig(
+        n_chips=n_chips, neurons_per_chip=n_neurons,
+        n_inputs_per_chip=n_neurons, event_capacity=n_neurons,
+        bucket_capacity=16, ring_depth=16)
+    table = rt.random_table(key, n_neurons, n_chips, max_delay=12,
+                            min_delay=6)
+    tables = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_chips,) + x.shape), table)
+    spikes = jax.random.uniform(key, (n_chips, n_neurons)) < rate
+    ebs = jax.vmap(lambda s: ev.from_spikes(s, 0, n_neurons)[0])(spikes)
+    rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
+        jnp.arange(n_chips))
+    return cfg, ebs, tables, rings
+
+
+def _fabric_row(name, fab, ebs, tables, rings, reps):
+    step = fab.jit_step()
+    us = time_loop(step, ebs, tables, rings, reps=reps)
+    res = step(ebs, tables, rings)
+    wire = int(np.asarray(res.stats.wire_bytes).sum())
+    lost = int(np.asarray(res.stats.lost_to_failure).sum())
+    link_words = np.asarray(res.stats.link_words)
+    return (name, us, wire,
+            f"lost={lost};total_link_words={int(link_words.sum())};"
+            f"max_link={int(link_words.max())};"
+            f"expired={int(np.asarray(res.stats.expired).sum())}")
+
+
+def resilience_sweep(n_chips=16, n_neurons=128, rate=0.3, reps=12):
+    """Healthy vs one-chip-dead fabric step over the same torus, plus the
+    cold recompile cost of routing around the failure."""
+    topo = tpo.torus2d(4, 4, link_latency=1)
+    cfg, ebs, tables, rings = _load(n_chips, n_neurons, rate)
+    dead = n_chips // 2 + 1
+    healthy = tuple(c for c in range(n_chips) if c != dead)
+
+    rows = [
+        _fabric_row("resilience_baseline_torus4x4",
+                    PulseFabric(cfg, transport=topo),
+                    ebs, tables, rings, reps),
+        _fabric_row("resilience_degraded_torus4x4_1dead",
+                    PulseFabric(cfg, transport=topo, healthy=healthy),
+                    ebs, tables, rings, reps),
+    ]
+
+    # recovery-boundary recompile: BFS detours, cold caches each rep
+    best = float("inf")
+    for _ in range(max(3, reps // 2)):
+        tpo._degraded_routes.cache_clear()
+        tpo.tree_carriers.cache_clear()
+        t0 = time.perf_counter()
+        plan = tpo.compile_routes(topo, healthy=healthy)
+        best = min(best, time.perf_counter() - t0)
+    rows.append(("resilience_recompile_torus4x4", best * 1e6, 0,
+                 f"n_chips={n_chips};max_hops={int(plan.hops.max())}"))
+    return rows
+
+
+def recovery_drill(n_chips=4, n_neurons=16, kill_at=7, n_steps=12,
+                   ckpt_every=3):
+    """Time one full recovery: detect → restore committed checkpoint →
+    recompile routes on the surviving mesh → replay to the failure
+    point.  Reported untimed-per-call (us_per_call=0.0 — wall time is
+    checkpoint-I/O-bound and too machine-dependent to gate); the derived
+    column carries steps-to-resume and the wall clock."""
+    import dataclasses as _dc
+    import tempfile
+
+    from repro.core import resilience as rsl
+    from repro.runtime import ResilientRunner
+    from repro.snn import network as net
+
+    topo = tpo.ring(n_chips, link_latency=0)
+    comm = pc.PulseCommConfig(
+        n_chips=n_chips, neurons_per_chip=n_neurons,
+        n_inputs_per_chip=n_neurons, event_capacity=n_neurons,
+        bucket_capacity=n_neurons, ring_depth=16)
+    cfg = net.NetworkConfig(comm=comm, topology=topo)
+    key = jax.random.PRNGKey(0)
+    params = net.init_params(key, cfg)
+    init_state = net.init_state(cfg, params)
+    injector = rsl.FabricFaultInjector(n_chips=n_chips,
+                                       chip_failures=((1, kill_at),))
+
+    def make_step(healthy):
+        hcfg = _dc.replace(cfg, healthy=tuple(healthy))
+
+        def step_fn(state, t):
+            alive = injector.alive_at(t)
+            ext = 1.5 * (jax.random.uniform(
+                jax.random.PRNGKey(t), (n_chips, n_neurons)) < 0.4)
+            new_state, rec = net.step(hcfg, params, state,
+                                      ext * alive[:, None])
+            fzn, fzr = rsl.freeze(alive, (state.neuron, state.ring),
+                                  (new_state.neuron, new_state.ring))
+            return new_state._replace(neuron=fzn, ring=fzr), rec
+
+        return step_fn
+
+    def detect(state, t, healthy):
+        surviving = tuple(c for c in injector.healthy_after(t)
+                          if c in healthy)
+        return surviving if surviving != tuple(healthy) else None
+
+    with tempfile.TemporaryDirectory() as d:
+        runner = ResilientRunner(make_step=make_step, detect=detect,
+                                 ckpt_dir=d, n_chips=n_chips,
+                                 ckpt_every=ckpt_every)
+        t0 = time.perf_counter()
+        runner.run(init_state, n_steps)
+        wall_ms = (time.perf_counter() - t0) * 1e3
+    evt = runner.recoveries[0]
+    steps_to_resume = evt.detected_at - evt.resumed_from + 1
+    return [("resilience_recovery_drill", 0.0, 0,
+             f"steps_to_resume={steps_to_resume};"
+             f"recoveries={len(runner.recoveries)};"
+             f"run_wall_ms={wall_ms:.0f}")]
+
+
+def pod_sweep(n_neurons=96, rate=0.3, reps=12):
+    """One fabric step over the two-level pod composition: 4 pods x 8
+    chips, dense intra-pod exchange, routed ring of pods."""
+    topo = tpo.pod(tpo.ring(4, link_latency=1), 8)
+    cfg, ebs, tables, rings = _load(topo.n_chips, n_neurons, rate, seed=1)
+    return [_fabric_row("pod_fabric_ring4x8",
+                        PulseFabric(cfg, transport=topo),
+                        ebs, tables, rings, reps)]
+
+
+def main(csv=True, smoke=False):
+    """Returns rows of (name, us_per_call, wire_bytes, derived) for
+    benchmarks/run.py (same smoke policy as benchmarks/topology.py: keep
+    the cell sizes — the names are the baseline contract — trim reps)."""
+    reps = 6 if smoke else 12
+    out = (resilience_sweep(reps=reps) + recovery_drill()
+           + pod_sweep(reps=reps))
+    if csv:
+        for name, us, wire, derived in out:
+            print(f"{name},{us:.1f},{wire},{derived}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

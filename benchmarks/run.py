@@ -7,6 +7,8 @@
   topology     — dense vs torus vs switch-tree routed fabric: us/step,
                  wire words per link, max link occupancy (paper §2.1's
                  switched network / arXiv:2111.15296's switch hierarchy)
+  resilience   — healthy vs one-chip-dead fabric step, recovery-boundary
+                 route recompile cost, and the two-level pod composition
   latency      — ISI-doubling demo timing + per-hop latency (paper §4)
   loss_budget  — event loss vs axonal-delay budget (paper §3.1 expiry)
   lm_roofline  — per-(arch x shape) roofline terms from the dry-run
@@ -33,11 +35,12 @@ def main(argv=None) -> None:
     args = p.parse_args(argv)
 
     from benchmarks import (aggregation, latency, lm_roofline, loss_budget,
-                            topology)
+                            resilience, topology)
 
     print("name,us_per_call,wire_bytes,derived")
     rows = []
-    for mod in (aggregation, topology, latency, loss_budget, lm_roofline):
+    for mod in (aggregation, topology, resilience, latency, loss_budget,
+                lm_roofline):
         rows.extend(mod.main(csv=True, smoke=args.smoke))
 
     if args.json:

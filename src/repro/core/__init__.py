@@ -17,6 +17,7 @@ from repro.core import (
     fabric,
     flowcontrol,
     merge,
+    resilience,
     routing,
     topology,
     transport,
@@ -27,10 +28,17 @@ from repro.core.fabric import (
     PulseFabric,
     register_transport,
 )
+from repro.core.resilience import (
+    FabricFaultInjector,
+    HealthConfig,
+    HealthState,
+)
 from repro.core.topology import (
     RoutedTransport,
     Topology,
+    compile_routes,
     direct,
+    pod,
     ring,
     switch_tree,
     torus2d,
@@ -52,22 +60,28 @@ __all__ = [
     "fabric",
     "flowcontrol",
     "merge",
+    "resilience",
     "routing",
     "topology",
     "transport",
     "CommStats",
     "Delivered",
+    "FabricFaultInjector",
     "FabricResult",
     "FlushBuffer",
     "FlowControlConfig",
+    "HealthConfig",
+    "HealthState",
     "PulseCommConfig",
     "PulseFabric",
     "RoutedTransport",
     "Topology",
+    "compile_routes",
     "register_transport",
     "comm_step",
     "multi_chip_step",
     "direct",
+    "pod",
     "ring",
     "switch_tree",
     "torus2d",

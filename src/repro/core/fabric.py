@@ -49,6 +49,7 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import buckets as bk
 from repro.core import delays as dl
@@ -206,10 +207,41 @@ class PulseFabric:
                     | TransportBinding) = "local",
         *,
         flow: FlowControlConfig | None = None,
+        healthy=None,
+        dead_links=(),
     ):
         self.cfg = cfg
         self.flow = flow
+        self._spec = transport
+        self.healthy = tpo.normalize_healthy(cfg.n_chips, healthy)
+        if self.healthy is not None and len(self.healthy) == cfg.n_chips:
+            self.healthy = None
+        self.dead_links = tpo.normalize_dead_links(dead_links)
         self._binding = _resolve(cfg, transport)
+        # Degraded execution: rebind a routed transport onto the plan
+        # recompiled around the failures, and build the static
+        # deliverability table the injection stage culls against (events
+        # whose source/destination/route is dead never touch the wire —
+        # they drop into ``CommStats.lost_to_failure``).
+        self._deliverable = None
+        if self.healthy is not None or self.dead_links:
+            alive = np.ones(cfg.n_chips, bool)
+            if self.healthy is not None:
+                alive[:] = False
+                alive[list(self.healthy)] = True
+            tr = self._binding.transport
+            if isinstance(tr, tpo.RoutedTransport):
+                tr = tr.with_health(self.healthy, self.dead_links)
+                self._binding = dataclasses.replace(
+                    self._binding, transport=tr)
+                reach = tr.plan.hops >= 0
+            else:
+                if self.dead_links:
+                    raise ValueError(
+                        "dead_links need a routed topology transport; "
+                        "dense transports model no individual links")
+                reach = np.ones((cfg.n_chips, cfg.n_chips), bool)
+            self._deliverable = reach & alive[:, None] & alive[None, :]
         self._jit_cache: dict[str, Callable] = {}
         self.trace_counts: dict[str, int] = {}
         max_lat = int(getattr(self._binding.transport,
@@ -249,6 +281,16 @@ class PulseFabric:
     @property
     def batched(self) -> bool:
         return self._binding.batched
+
+    def degrade(self, healthy=None, dead_links=()) -> "PulseFabric":
+        """A new fabric on the same config/transport spec executing the
+        route plan recompiled around the given failures — the recovery
+        boundary's plan swap (carries are shape-compatible, so ring /
+        flow / merge / sendq state threads straight across).  Compile-time
+        route recompilation keeps the step function jit-static; swap
+        fabrics between steps, never inside a trace."""
+        return PulseFabric(self.cfg, self._spec, flow=self.flow,
+                           healthy=healthy, dead_links=dead_links)
 
     # -- flow control -------------------------------------------------------
 
@@ -466,6 +508,13 @@ class PulseFabric:
         t0 = ring.now
         flushbuf = pc.flush_init(cfg)
         inject_stats = []
+        reach_row = None
+        if self._deliverable is not None:
+            # This chip's row of the static deliverability table: False
+            # where the destination (or every surviving route to it) is
+            # dead under the installed health mask.
+            reach_row = jnp.take(jnp.asarray(self._deliverable),
+                                 self.transport.chip_index(), axis=0)
 
         for k in range(b):
             now_k = t0 + k
@@ -476,10 +525,25 @@ class PulseFabric:
             # event was counted when first offered, so run-level
             # conservation reads
             #   Σ sent == ring + expired + overflow + merge_dropped
-            #             + stalled + final queue occupancies.
+            #             + stalled + lost_to_failure + final queue
+            #             occupancies.
             sent = jnp.sum(routed.valid.astype(jnp.int32))
             if self.sendq_enabled:
                 routed = self._requeue(routed, sendq, now_k)
+            lost = jnp.int32(0)
+            if reach_row is not None:
+                # Cull after the requeue so replayed in-flight events bound
+                # for a chip that died while they waited are accounted too;
+                # before the wrap check so a culled event is never also
+                # counted expired.  Out-of-range destinations keep their
+                # historical drop path at the exchange.
+                in_range = (routed.dest_chip >= 0) & (
+                    routed.dest_chip < cfg.n_chips)
+                ok = ~in_range | jnp.take(
+                    reach_row, jnp.clip(routed.dest_chip, 0,
+                                        cfg.n_chips - 1))
+                lost = jnp.sum(routed.valid & ~ok).astype(jnp.int32)
+                routed = routed._replace(valid=routed.valid & ok)
             # Enforce the 8-bit wrap contract at the injection boundary:
             # only deadlines strictly inside the future half-window
             # (defer < diff < 128) ride the wire word.  Later deadlines
@@ -514,7 +578,7 @@ class PulseFabric:
                     + jnp.sum(fill) * pc.EVENT_BYTES)
             inject_stats.append(dict(
                 sent=sent, overflow=overflow, stalled=stalled,
-                wrap_expired=wrap_expired, traffic=traffic,
+                wrap_expired=wrap_expired, traffic=traffic, lost=lost,
                 wire_bytes=wire.astype(jnp.int32),
                 utilization=(fill.astype(jnp.float32).mean()
                              / float(cfg.bucket_capacity)),
@@ -573,6 +637,7 @@ class PulseFabric:
                     link.words),
                 link_backlog=link.backlog if last else jnp.zeros_like(
                     link.backlog),
+                lost_to_failure=inj["lost"],
             ))
 
         delivered = pc.Delivered(words=jnp.stack(out_words))

@@ -136,6 +136,12 @@ class CommStats(NamedTuple):
     a :class:`repro.core.topology.RoutedTransport` reports its topology's
     ports (torus ±dim links / tree up-down links) including transit
     traffic the chip forwards on behalf of others.
+
+    ``lost_to_failure`` counts events culled before the wire because their
+    source or destination chip (or every route between them) is dead under
+    the fabric's installed health mask — the resilience subsystem's leg of
+    the conservation invariant ``injected == delivered + queued + stalled
+    + expired + lost_to_failure`` (see :mod:`repro.core.resilience`).
     """
 
     sent: jax.Array          # valid events offered to the network
@@ -148,6 +154,7 @@ class CommStats(NamedTuple):
     traffic: jax.Array       # [n_chips] events by destination chip
     link_words: jax.Array    # [n_ports] words driven per network port
     link_backlog: jax.Array  # [n_ports] words beyond per-link capacity
+    lost_to_failure: jax.Array  # culled: source/dest/route dead (resilience)
 
 
 class Delivered(NamedTuple):

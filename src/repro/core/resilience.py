@@ -1,0 +1,212 @@
+"""Resilience: chip-failure injection, detection and degraded execution.
+
+The paper's EXTOLL deployment is a multi-chip hierarchy (chips → FPGA →
+Tourmalet switch) whose scaled follow-up [Thommes et al. 2021,
+arXiv:2111.15296] reaches wafer-module counts where individual chips and
+links *will* fail.  This module supplies the pure, jit-compatible pieces
+that make the fabric survive that; the orchestration that freezes the
+schedule, restores a checkpoint and resumes lives in
+:class:`repro.runtime.fault.ResilientRunner`.
+
+Four layers (this module is layer 1; pointers for the rest):
+
+1. **Health model** (here).  A per-chip boolean alive mask is ordinary
+   fabric-adjacent state.  :class:`FabricFaultInjector` kills chip c at
+   step t *via masks, never exceptions* — inside jit a dead chip simply
+   stops emitting events (:meth:`FabricFaultInjector.mask_events`) and its
+   per-chip carries stop evolving (:func:`freeze`), exactly how a real
+   dead chip looks from the fabric.  Detection is two cheap observables:
+   a one-``psum`` heartbeat (:func:`heartbeat` / :func:`beats_local`) and
+   the existing credit protocol — a chip with traffic outstanding whose
+   notification counter stops advancing past ``credit_timeout`` steps is
+   declared dead (:func:`credit_watch`; dead chips' counters freeze, so
+   the watch observes real protocol state, not a side channel).
+2. **Degraded routing** (:mod:`repro.core.topology`).
+   ``compile_routes(topo, healthy=..., dead_links=...)`` recompiles the
+   forwarding tables around the failures; ``PulseFabric.degrade`` swaps
+   the recompiled plan in at a recovery boundary and culls unreachable
+   traffic into ``CommStats.lost_to_failure``.
+3. **Recovery orchestration** (:mod:`repro.runtime.fault`).
+   ``ResilientRunner`` composes detection → checkpoint restore → route
+   recompile → SendQueue replay → resume on top of ``TrainRunner``.
+4. **Pod scale** (:mod:`repro.core.topology` ``kind="pod"``,
+   ``launch/dryrun.py``, ``benchmarks/resilience.py``).
+
+Conservation with failures (pinned in tests/test_resilience.py)::
+
+    injected == delivered + queued + stalled + expired + lost_to_failure
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flowcontrol as fc
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Detection parameters.
+
+    ``credit_timeout`` — steps a chip may go without a heartbeat (or,
+    for :func:`credit_watch`, without credit-protocol progress while
+    traffic is outstanding) before it is declared dead.  0 declares on
+    the first missed beat.
+    """
+
+    n_chips: int
+    credit_timeout: int = 4
+
+
+class HealthState(NamedTuple):
+    """Per-chip liveness belief, threaded through the step loop.
+
+    ``alive`` is sticky-false: once a chip is declared dead it stays dead
+    until the recovery boundary rebuilds the fabric on the surviving mesh
+    (a flapping chip must re-join via recovery, never silently).
+    """
+
+    alive: jax.Array       # bool[n_chips]
+    last_heard: jax.Array  # int32[n_chips] — last step each chip beat
+
+
+def health_init(cfg: HealthConfig) -> HealthState:
+    return HealthState(alive=jnp.ones((cfg.n_chips,), bool),
+                       last_heard=jnp.zeros((cfg.n_chips,), jnp.int32))
+
+
+def beats_local(alive_bits: jax.Array) -> jax.Array:
+    """Heartbeat vector on the local (explicit chip axis) path: each
+    chip's alive bit IS its beat — ``int32[n_chips]``."""
+    return alive_bits.astype(jnp.int32)
+
+
+def heartbeat(transport, alive_bit: jax.Array) -> jax.Array:
+    """One cheap ``psum`` heartbeat inside shard_map: every chip
+    contributes a one-hot of its own index gated by its alive bit;
+    ``result[c] > 0`` iff chip c checked in this step.  Bitwise-equal to
+    :func:`beats_local` under the fabric's local vmap axis."""
+    n = transport.n_chips
+    me = transport.chip_index()
+    onehot = (jnp.arange(n) == me) & (alive_bit > 0)
+    return transport.psum(onehot.astype(jnp.int32))
+
+
+def observe(cfg: HealthConfig, state: HealthState, beats: jax.Array,
+            t: jax.Array) -> HealthState:
+    """Fold one step's heartbeat vector into the liveness belief: a chip
+    silent for more than ``credit_timeout`` steps is declared dead."""
+    t = jnp.asarray(t, jnp.int32)
+    last = jnp.where(beats > 0, t, state.last_heard)
+    alive = state.alive & ((t - last) <= cfg.credit_timeout)
+    return HealthState(alive=alive, last_heard=last)
+
+
+class CreditWatch(NamedTuple):
+    """Credit-protocol progress tracker (the paper's notification packets
+    as a liveness observable)."""
+
+    last_notif: jax.Array  # int32[n_chips] notification counters last seen
+    last_step: jax.Array   # int32[n_chips] last step each counter advanced
+
+
+def credit_watch_init(cfg: HealthConfig) -> CreditWatch:
+    return CreditWatch(last_notif=jnp.zeros((cfg.n_chips,), jnp.int32),
+                       last_step=jnp.zeros((cfg.n_chips,), jnp.int32))
+
+
+def credit_watch(
+    cfg: HealthConfig,
+    watch: CreditWatch,
+    flow: fc.RingState,
+    t: jax.Array,
+) -> tuple[CreditWatch, jax.Array]:
+    """Declare chips whose credits never return.
+
+    ``flow`` is the per-chip credit state with a leading chip axis (the
+    local-path carry).  A chip is suspected dead when it has packets
+    outstanding (``head > tail`` — consumers owe credits) but its
+    notification counter has not advanced for ``credit_timeout`` steps.
+    Dead chips' carries are frozen by the injector, so their counters
+    really do stop.  Returns ``(watch', suspected bool[n_chips])``.
+    """
+    t = jnp.asarray(t, jnp.int32)
+    progressed = flow.notifications != watch.last_notif
+    last = jnp.where(progressed, t, watch.last_step)
+    outstanding = (flow.head - flow.tail) > 0
+    suspected = outstanding & ((t - last) > cfg.credit_timeout)
+    return CreditWatch(last_notif=flow.notifications, last_step=last), suspected
+
+
+def freeze(alive: jax.Array, old_tree, new_tree):
+    """Pin dead chips' rows of a per-chip state pytree: every leaf has a
+    leading ``[n_chips]`` axis; rows of dead chips keep their old value.
+    This is what makes a masked kill look like a real one — the dead
+    chip's clocks, queues and notification counters all stop."""
+    def pick(o, n):
+        return jnp.where(alive.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+    return jax.tree.map(pick, old_tree, new_tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricFaultInjector:
+    """Deterministic, jit-compatible fault schedule.
+
+    ``chip_failures`` — (chip, step) pairs: chip c is dead from step t on.
+    ``link_failures`` — (chip, port, step) triples: the link behind that
+    port is cut from step t on (routing is static per fabric, so link
+    kills take effect at the next route recompile; chip kills act
+    immediately through the masks).
+
+    Inside jit, use :meth:`alive_at` / :meth:`mask_events` with the traced
+    step.  At a recovery boundary (python-level step), use
+    :meth:`healthy_after` / :meth:`dead_links_after` to recompile routes.
+    """
+
+    n_chips: int
+    chip_failures: tuple = ()
+    link_failures: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "chip_failures",
+            tuple(sorted((int(c), int(t)) for c, t in self.chip_failures)))
+        object.__setattr__(
+            self, "link_failures",
+            tuple(sorted((int(c), int(p), int(t))
+                         for c, p, t in self.link_failures)))
+        for c, _ in self.chip_failures:
+            if not 0 <= c < self.n_chips:
+                raise ValueError(f"chip {c} out of range")
+
+    def alive_at(self, t) -> jax.Array:
+        """bool[n_chips] — the ground-truth alive mask at step ``t``
+        (traced or static)."""
+        t = jnp.asarray(t, jnp.int32)
+        alive = jnp.ones((self.n_chips,), bool)
+        for c, s in self.chip_failures:
+            alive = alive & ~((jnp.arange(self.n_chips) == c) & (t >= s))
+        return alive
+
+    def mask_events(self, events, t):
+        """Silence dead chips' event stream (local path: leading chip
+        axis).  The chip still participates in collectives — SPMD demands
+        it — but contributes nothing, like real dead silicon behind a
+        live switch port."""
+        alive = self.alive_at(t)
+        shape = (self.n_chips,) + (1,) * (events.valid.ndim - 1)
+        return events._replace(valid=events.valid & alive.reshape(shape))
+
+    def healthy_after(self, t: int) -> tuple:
+        """Static tuple of chips still alive strictly after step ``t`` —
+        feed to ``compile_routes`` / ``PulseFabric.degrade``."""
+        dead = {c for c, s in self.chip_failures if s <= t}
+        return tuple(c for c in range(self.n_chips) if c not in dead)
+
+    def dead_links_after(self, t: int) -> tuple:
+        """Static ((chip, port), ...) of links cut at or before ``t``."""
+        return tuple((c, p) for c, p, s in self.link_failures if s <= t)

@@ -35,6 +35,30 @@ runs both inside ``shard_map`` (real ICI collectives) and under the
 fabric's internal vmap with a named axis (single-device "local" path) —
 ``PulseFabric(cfg, transport=Topology(...))`` binds the latter, so local
 and shard_map execution stay bitwise identical by construction.
+
+Two extensions support the resilience subsystem
+(:mod:`repro.core.resilience`):
+
+* **Degraded routing.**  ``compile_routes(topo, healthy=..., dead_links=...)``
+  recompiles the forwarding tables around dead chips and cut links:
+  detour next-hops for tori (BFS over the surviving link graph,
+  deterministic lowest-port tie-breaks), trunk-share re-homing onto the
+  lowest-indexed healthy sibling for the switch tree.  Unreachable pairs
+  get ``hops == -1`` — the fabric culls their traffic with
+  ``CommStats.lost_to_failure`` accounting *before* it touches the wire.
+  A ``RoutedTransport`` carrying a ``healthy`` mask executes the detour
+  plan with a generic next-hop relay (one ``ppermute`` per port per
+  round; see :meth:`RoutedTransport._cube_exchange`), and
+  :func:`reference_link_words` doubles as the degraded-occupancy oracle.
+* **Pod composition.**  ``kind="pod"`` stacks ``chips_per_group`` chips on
+  a dense pod-local crossbar behind an inter-pod graph (any torus /
+  switch_tree / direct ``pod_graph``): intra-pod traffic is one dense
+  member exchange, cross-pod slabs ride the routed pod graph with all
+  member lanes moving in lockstep.  On a real 2-axis mesh pass
+  ``axis=("pod", "chip")`` — the intra-pod stage lowers to one
+  ``all_to_all`` over the chip axis and the pod stage to ``ppermute``
+  rounds over the pod axis (this is what ``launch/dryrun.py`` lowers at
+  512 hosts).
 """
 
 from __future__ import annotations
@@ -58,7 +82,7 @@ TREE_DOWN_CHIP = 1    # FPGA → chip downlink
 TREE_UP_TRUNK = 2     # this chip's share of the FPGA → switch trunk
 TREE_DOWN_TRUNK = 3   # this chip's share of the switch → FPGA trunk
 
-_KINDS = ("direct", "torus", "switch_tree")
+_KINDS = ("direct", "torus", "switch_tree", "pod")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,11 +111,12 @@ class Topology:
     kind: str
     n_chips: int
     dims: tuple[int, ...] = ()        # torus grid (row-major, dim 0 outer)
-    chips_per_group: int = 0          # switch_tree: chips behind one FPGA
+    chips_per_group: int = 0          # switch_tree/pod: chips per FPGA/pod
     link_latency: int = 1
     trunk_latency: int = 1
     link_bandwidth: int = 0
     link_credits: int = 0
+    pod_graph: "Topology | None" = None   # pod: the inter-pod network
 
     def __post_init__(self):
         if self.kind not in _KINDS:
@@ -110,6 +135,15 @@ class Topology:
                 raise ValueError(
                     f"chips_per_group {m} does not divide "
                     f"n_chips={self.n_chips}")
+        if self.kind == "pod":
+            pg = self.pod_graph
+            if pg is None or pg.kind == "pod":
+                raise ValueError("pod topology needs a non-pod pod_graph")
+            m = self.chips_per_group
+            if m < 1 or pg.n_chips * m != self.n_chips:
+                raise ValueError(
+                    f"{pg.n_chips} pods x {m} chips do not tile "
+                    f"n_chips={self.n_chips}")
         if self.link_latency < 0 or self.trunk_latency < 0:
             raise ValueError("latencies must be >= 0")
 
@@ -122,12 +156,22 @@ class Topology:
         return self.n_chips // self.chips_per_group
 
     @property
+    def n_pods(self) -> int:
+        if self.kind != "pod":
+            raise ValueError(
+                f"n_pods is only defined for pod topologies, "
+                f"not {self.kind!r}")
+        return self.pod_graph.n_chips
+
+    @property
     def n_ports(self) -> int:
         """Ports per chip — the leading dim of the per-chip link stats."""
         if self.kind == "direct":
             return 1
         if self.kind == "torus":
             return 2 * len(self.dims)
+        if self.kind == "pod":
+            return 1 + self.pod_graph.n_ports
         return 4
 
     @property
@@ -137,6 +181,9 @@ class Topology:
         if self.kind == "torus":
             return tuple(
                 f"dim{i}{s}" for i in range(len(self.dims)) for s in "+-")
+        if self.kind == "pod":
+            return ("pod_local",) + tuple(
+                f"pod_{p}" for p in self.pod_graph.port_names)
         return ("up_chip", "down_chip", "up_trunk", "down_trunk")
 
     @property
@@ -146,9 +193,11 @@ class Topology:
         caps = [c for c in (self.link_bandwidth, self.link_credits) if c > 0]
         return min(caps) if caps else 0
 
-    def transport(self, axis: str) -> "RoutedTransport":
+    def transport(self, axis: "str | tuple[str, str]") -> "RoutedTransport":
         """A RoutedTransport over mesh axis ``axis`` (shard_map use; the
-        fabric binds the local-vmap axis itself when handed a Topology)."""
+        fabric binds the local-vmap axis itself when handed a Topology).
+        ``kind="pod"`` additionally accepts a 2-tuple
+        ``(pod_axis, chip_axis)`` for a real two-level mesh."""
         return RoutedTransport(topology=self, axis=axis)
 
 
@@ -188,6 +237,22 @@ def switch_tree(n_groups: int, chips_per_group: int, *, link_latency: int = 1,
                     link_bandwidth=link_bandwidth, link_credits=link_credits)
 
 
+def pod(pod_graph: Topology, chips_per_pod: int, *, link_latency: int = 1,
+        link_bandwidth: int = 0, link_credits: int = 0) -> Topology:
+    """Two-level pod composition: ``chips_per_pod`` chips on a dense
+    pod-local crossbar, pods connected by ``pod_graph`` (torus /
+    switch_tree / direct).  Same-pod traffic takes one crossbar hop
+    (``link_latency``); cross-pod traffic pays two crossbar hops plus the
+    pod graph's path latency.  Chip c lives in pod ``c // chips_per_pod``
+    at member lane ``c % chips_per_pod``; cross-pod slabs move member
+    lanes in lockstep (lane m of every pod forwards lane-m traffic), so
+    pod-link occupancy is attributed to the member lane that carries it."""
+    return Topology(kind="pod", n_chips=pod_graph.n_chips * chips_per_pod,
+                    chips_per_group=chips_per_pod, pod_graph=pod_graph,
+                    link_latency=link_latency, link_bandwidth=link_bandwidth,
+                    link_credits=link_credits)
+
+
 # ---------------------------------------------------------------------------
 # Route compiler
 # ---------------------------------------------------------------------------
@@ -215,11 +280,64 @@ class RoutePlan(NamedTuple):
     coords: np.ndarray
 
 
-@functools.lru_cache(maxsize=None)
-def compile_routes(topo: Topology) -> RoutePlan:
+def normalize_healthy(n_chips: int, healthy) -> tuple[int, ...] | None:
+    """Canonical hashable form of an alive-chip set: a sorted tuple of
+    alive chip indices.  Accepts None (all alive), an iterable of chip
+    indices, or a boolean mask of length ``n_chips``."""
+    if healthy is None:
+        return None
+    arr = np.asarray(healthy)
+    if arr.dtype == bool:
+        if arr.shape != (n_chips,):
+            raise ValueError(
+                f"healthy mask shape {arr.shape} != ({n_chips},)")
+        idx = np.nonzero(arr)[0]
+    else:
+        idx = np.unique(arr.astype(np.int64))
+    if idx.size and (idx[0] < 0 or idx[-1] >= n_chips):
+        raise ValueError(f"healthy chip index out of range 0..{n_chips - 1}")
+    if idx.size == n_chips:
+        return None        # full health == baseline fast paths
+    return tuple(int(c) for c in idx)
+
+
+def normalize_dead_links(dead_links) -> tuple[tuple[int, int], ...]:
+    """Canonical hashable form of a cut-link set: sorted (chip, port)
+    pairs."""
+    return tuple(sorted((int(c), int(p)) for c, p in dead_links))
+
+
+def compile_routes(topo: Topology, healthy=None,
+                   dead_links=()) -> RoutePlan:
     """Compile the static forwarding tables: dimension-ordered routing for
     tori (dim 0 corrected first, shorter ring direction, ties broken
-    forward), up/down routing for the switch tree."""
+    forward), up/down routing for the switch tree.
+
+    With ``healthy`` (an alive-chip set — indices or a boolean mask) or
+    ``dead_links`` ((chip, port) pairs, cut bidirectionally) the tables
+    are recompiled around the failures: BFS detours over the surviving
+    torus graph (deterministic lowest-port tie-breaks), trunk-share
+    re-homing for the switch tree (see :func:`tree_carriers`), endpoint
+    masking for direct/pod.  Unreachable or dead pairs get ``port == -1``
+    and ``hops == -1``; the fabric drops their traffic at injection with
+    ``CommStats.lost_to_failure`` accounting.  When nothing is actually
+    dead the baseline plan is returned unchanged, so installing a
+    full-health mask is a no-op."""
+    healthy = normalize_healthy(topo.n_chips, healthy)
+    if healthy is not None and len(healthy) == topo.n_chips:
+        healthy = None
+    dead_links = normalize_dead_links(dead_links)
+    if dead_links and not all(
+            0 <= c < topo.n_chips and 0 <= p < topo.n_ports
+            for c, p in dead_links):
+        raise ValueError(f"dead link out of range: {dead_links}")
+    if healthy is None and not dead_links:
+        return _baseline_routes(topo)
+    return _degraded_routes(topo, healthy, dead_links)
+
+
+@functools.lru_cache(maxsize=None)
+def _baseline_routes(topo: Topology) -> RoutePlan:
     n = topo.n_chips
     i32 = np.int32
     port = np.full((n, n), -1, i32)
@@ -243,6 +361,25 @@ def compile_routes(topo: Topology) -> RoutePlan:
         hops[cross] = 4
         lat[off] = 2 * topo.link_latency
         lat[cross] = 2 * topo.link_latency + 2 * topo.trunk_latency
+        coords = np.stack([grp, np.arange(n) % m], axis=1).astype(i32)
+    elif topo.kind == "pod":
+        # Same pod: one crossbar hop.  Cross pod: crossbar out, the pod
+        # graph's path, crossbar in.  Intermediate chips are captured by
+        # the port sequence (like the tree), so next stays the
+        # destination; the pod-graph port is offset past "pod_local".
+        m = topo.chips_per_group
+        pp = compile_routes(topo.pod_graph)
+        grp = np.arange(n) // m
+        off = ~np.eye(n, dtype=bool)
+        gs, gd = grp[:, None], grp[None, :]
+        cross = gs != gd
+        intra = off & ~cross
+        port[intra] = 0
+        port[cross] = 1 + pp.port[gs, gd][cross]
+        hops[intra] = 1
+        hops[cross] = (2 + pp.hops[gs, gd])[cross]
+        lat[intra] = topo.link_latency
+        lat[cross] = (2 * topo.link_latency + pp.latency[gs, gd])[cross]
         coords = np.stack([grp, np.arange(n) % m], axis=1).astype(i32)
     else:  # torus — all pairwise tables vectorized over [n, n, ndims]
         dims = np.asarray(topo.dims)
@@ -273,7 +410,159 @@ def compile_routes(topo: Topology) -> RoutePlan:
                      coords=coords)
 
 
-def reference_link_words(topo: Topology, traffic: np.ndarray) -> np.ndarray:
+def _torus_neighbors(topo: Topology) -> np.ndarray:
+    """int64[n, 2*ndims]: the chip behind each torus port (2i = dim i
+    forward, 2i+1 = backward)."""
+    n, dims = topo.n_chips, topo.dims
+    nbr = np.zeros((n, 2 * len(dims)), np.int64)
+    for c in range(n):
+        cc = np.array(np.unravel_index(c, dims))
+        for i in range(len(dims)):
+            for j, delta in ((0, +1), (1, -1)):
+                s = cc.copy()
+                s[i] = (s[i] + delta) % dims[i]
+                nbr[c, 2 * i + j] = np.ravel_multi_index(tuple(s), dims)
+    return nbr
+
+
+@functools.lru_cache(maxsize=None)
+def tree_carriers(topo: Topology, healthy=None,
+                  dead_links=()) -> tuple[np.ndarray, np.ndarray]:
+    """Switch-tree trunk-share carriers under failure: ``(up, down)``
+    int64[n] — the group sibling whose FPGA↔switch trunk share carries
+    chip c's cross-group traffic (c itself when its own share is live,
+    else the lowest-indexed healthy sibling with a live share, -1 when
+    the whole group lost its trunk).  Port re-homing: both the traced
+    ``up_trunk`` / ``down_trunk`` counters and the
+    :func:`reference_link_words` oracle attribute cross-group words to
+    the carrier, not the originating chip."""
+    if topo.kind != "switch_tree":
+        raise ValueError("tree_carriers needs a switch_tree topology")
+    n, m = topo.n_chips, topo.chips_per_group
+    alive = np.ones(n, bool)
+    if healthy is not None:
+        alive[:] = False
+        alive[list(healthy)] = True
+    tu, td = alive.copy(), alive.copy()
+    for c, p in dead_links:
+        if p == TREE_UP_TRUNK:
+            tu[c] = False
+        elif p == TREE_DOWN_TRUNK:
+            td[c] = False
+    out = []
+    for ok in (tu, td):
+        carrier = np.full(n, -1, np.int64)
+        for g in range(n // m):
+            members = np.arange(g * m, (g + 1) * m)
+            live = members[ok[members]]
+            for c in members:
+                if ok[c]:
+                    carrier[c] = c
+                elif live.size:
+                    carrier[c] = live[0]
+        out.append(carrier)
+    return out[0], out[1]
+
+
+@functools.lru_cache(maxsize=None)
+def _degraded_routes(topo: Topology, healthy, dead_links) -> RoutePlan:
+    """Recompile forwarding state on the surviving graph.  torus: BFS
+    shortest paths avoiding dead chips and cut links (ties: lowest port).
+    switch_tree: leaf-link loss isolates the chip for that direction,
+    trunk-share loss re-homes through a sibling.  direct: endpoint
+    masking (a cut of the single port isolates the chip).  pod: endpoint
+    masking only — the pod fabric (crossbars/switches) is modeled as
+    outliving chip deaths, so pod-level routes stay the baseline plan and
+    per-chip link cuts are rejected."""
+    n = topo.n_chips
+    i32 = np.int32
+    alive = np.ones(n, bool)
+    if healthy is not None:
+        alive[:] = False
+        alive[list(healthy)] = True
+    base = _baseline_routes(topo)
+    coords = base.coords
+    port = np.full((n, n), -1, i32)
+    nxt = np.tile(np.arange(n, dtype=i32), (n, 1))
+    hops = np.full((n, n), -1, i32)
+    np.fill_diagonal(hops, 0)
+    lat = np.zeros((n, n), i32)
+
+    if topo.kind == "direct":
+        cut = np.zeros(n, bool)
+        for c, _ in dead_links:
+            cut[c] = True
+        ok = alive & ~cut
+        reach = ok[:, None] & ok[None, :] & ~np.eye(n, dtype=bool)
+        port[reach] = 0
+        hops[reach] = 1
+        lat[reach] = topo.link_latency
+    elif topo.kind == "torus":
+        nbr = _torus_neighbors(topo)
+        n_ports = nbr.shape[1]
+        link_ok = np.ones((n, n_ports), bool)
+        for c, p in dead_links:
+            link_ok[c, p] = False
+            link_ok[nbr[c, p], p ^ 1] = False     # cut both directions
+        edge = link_ok & alive[:, None] & alive[nbr]
+        for d in np.nonzero(alive)[0]:
+            dist = np.full(n, -1, np.int64)
+            dist[d] = 0
+            frontier = [d]
+            while frontier:
+                nxt_frontier = []
+                for u in frontier:
+                    for p in range(n_ports):
+                        v = nbr[u, p]
+                        if edge[u, p] and dist[v] < 0:
+                            dist[v] = dist[u] + 1
+                            nxt_frontier.append(v)
+                frontier = nxt_frontier
+            for c in np.nonzero(alive & (dist > 0))[0]:
+                for p in range(n_ports):
+                    if edge[c, p] and dist[nbr[c, p]] == dist[c] - 1:
+                        port[c, d] = p
+                        nxt[c, d] = nbr[c, p]
+                        hops[c, d] = dist[c]
+                        lat[c, d] = dist[c] * topo.link_latency
+                        break
+    elif topo.kind == "switch_tree":
+        m = topo.chips_per_group
+        grp = np.arange(n) // m
+        up, down = alive.copy(), alive.copy()
+        for c, p in dead_links:
+            if p == TREE_UP_CHIP:
+                up[c] = False
+            elif p == TREE_DOWN_CHIP:
+                down[c] = False
+        cu, cd = tree_carriers(topo, healthy, dead_links)
+        same = grp[:, None] == grp[None, :]
+        reach = ((alive & up)[:, None] & (alive & down)[None, :]
+                 & ~np.eye(n, dtype=bool))
+        cross_ok = (cu >= 0)[:, None] & (cd >= 0)[None, :]
+        reach &= same | cross_ok
+        cross = reach & ~same
+        port[reach] = TREE_UP_CHIP
+        hops[reach] = 2
+        hops[cross] = 4
+        lat[reach] = 2 * topo.link_latency
+        lat[cross] = 2 * topo.link_latency + 2 * topo.trunk_latency
+    else:  # pod
+        if dead_links:
+            raise ValueError(
+                "per-chip link cuts are not modeled for pod topologies "
+                "(the pod fabric is shared); kill chips instead")
+        reach = alive[:, None] & alive[None, :] & ~np.eye(n, dtype=bool)
+        port = np.where(reach, base.port, -1).astype(i32)
+        hops = np.where(reach | np.eye(n, dtype=bool), base.hops,
+                        -1).astype(i32)
+        lat = np.where(reach, base.latency, 0).astype(i32)
+    return RoutePlan(port=port, next=nxt, hops=hops, latency=lat,
+                     coords=coords)
+
+
+def reference_link_words(topo: Topology, traffic: np.ndarray, healthy=None,
+                         dead_links=()) -> np.ndarray:
     """Oracle per-chip per-port word counts for a traffic matrix.
 
     ``traffic[s, d]`` = words source chip s offers for destination d.
@@ -282,26 +571,51 @@ def reference_link_words(topo: Topology, traffic: np.ndarray) -> np.ndarray:
     the same attribution :class:`RoutedTransport` reports.  Pure-numpy walk
     of the compiled forwarding tables; the test suite pins the transport's
     traced counters against this.
+
+    With ``healthy`` / ``dead_links`` this doubles as the
+    degraded-occupancy oracle: words walk the recompiled detour tables,
+    switch-tree trunk words are attributed to the re-homed carrier (see
+    :func:`tree_carriers`), and unreachable pairs contribute nothing (the
+    fabric culls them as ``lost_to_failure`` before the wire).  For pods,
+    ``pod_local`` counts words leaving their source member lane and the
+    pod-graph ports are billed per destination-member lane by recursing
+    onto the pod graph.
     """
-    plan = compile_routes(topo)
+    healthy = normalize_healthy(topo.n_chips, healthy)
+    dead_links = normalize_dead_links(dead_links)
+    plan = compile_routes(topo, healthy, dead_links)
     n = topo.n_chips
     out = np.zeros((n, topo.n_ports), np.int64)
+    if topo.kind == "switch_tree":
+        cu, cd = tree_carriers(topo, healthy, dead_links)
+    if topo.kind == "pod":
+        m, npods = topo.chips_per_group, topo.n_pods
+        lanes = [np.zeros((npods, npods), np.int64) for _ in range(m)]
     for s in range(n):
         for d in range(n):
             w = int(traffic[s, d])
-            if s == d or w == 0:
+            if s == d or w == 0 or plan.hops[s, d] <= 0:
                 continue
             if topo.kind == "switch_tree":
                 out[s, TREE_UP_CHIP] += w
                 out[d, TREE_DOWN_CHIP] += w
                 if s // topo.chips_per_group != d // topo.chips_per_group:
-                    out[s, TREE_UP_TRUNK] += w
-                    out[d, TREE_DOWN_TRUNK] += w
+                    out[cu[s], TREE_UP_TRUNK] += w
+                    out[cd[d], TREE_DOWN_TRUNK] += w
+            elif topo.kind == "pod":
+                if s % m != d % m:
+                    out[s, 0] += w
+                if s // m != d // m:
+                    lanes[d % m][s // m, d // m] += w
             else:
                 c = s
                 while c != d:
                     out[c, plan.port[c, d]] += w
                     c = int(plan.next[c, d])
+    if topo.kind == "pod":
+        for mm in range(m):
+            sub = reference_link_words(topo.pod_graph, lanes[mm])
+            out[np.arange(npods) * m + mm, 1:] += sub
     return out
 
 
@@ -339,30 +653,71 @@ class RoutedTransport:
     toward link occupancy, and relay buffers are padded with it).
 
     ``axis`` is a single mesh-axis name — the topology itself replaces the
-    hierarchical multi-axis mesh tricks of ``ShardMapTransport``.
+    hierarchical multi-axis mesh tricks of ``ShardMapTransport``.  The one
+    exception is ``kind="pod"``, which also accepts a 2-tuple
+    ``(pod_axis, chip_axis)``: the intra-pod crossbar then lowers to one
+    real ``all_to_all`` over the chip axis and the pod stage runs over the
+    pod axis.
+
+    ``healthy`` / ``dead_links`` bind a degraded plan (see
+    :func:`compile_routes`): routed contents are unchanged for surviving
+    pairs, torus traffic follows BFS detours via a generic next-hop relay
+    (:meth:`_cube_exchange`), and switch-tree trunk words are attributed
+    to the re-homed carrier chips.  Traffic for unreachable pairs must be
+    culled by the caller (the fabric does, with ``lost_to_failure``
+    accounting) — the transport assumes those lanes arrive empty.
+
+    ``block_size`` is internal plumbing for the pod composition: the mesh
+    axis holds ``n_chips * block_size`` devices and ``block_size``
+    consecutive devices share each topology endpoint (member lanes moving
+    in lockstep).
     """
 
     topology: Topology
-    axis: str
+    axis: "str | tuple[str, str]"
     apply_latency: bool = True
     # Rounds of per-link capacity one exchange may consume: a superstep
     # flush moves B steps of payload in one round-set, and the link has B
     # steps of wall-clock to drain it, so backlog is judged against
     # B * link_capacity (see with_flush_rounds).
     flush_rounds: int = 1
+    healthy: "tuple[int, ...] | None" = None
+    dead_links: tuple = ()
+    block_size: int = 1
 
     def __post_init__(self):
-        if not isinstance(self.axis, str):
+        if isinstance(self.axis, tuple):
+            if self.topology.kind != "pod" or len(self.axis) != 2:
+                raise TypeError(
+                    "non-pod topologies take a single axis name; a 2-tuple "
+                    "(pod_axis, chip_axis) is only valid for kind='pod'")
+        elif not isinstance(self.axis, str):
             raise TypeError("RoutedTransport takes a single axis name; the "
                             "topology models the hierarchy")
+        hz = normalize_healthy(self.topology.n_chips, self.healthy)
+        if hz is not None and len(hz) == self.topology.n_chips:
+            hz = None
+        object.__setattr__(self, "healthy", hz)
+        object.__setattr__(self, "dead_links",
+                           normalize_dead_links(self.dead_links))
 
     @property
     def n_chips(self) -> int:
         return self.topology.n_chips
 
     @property
+    def degraded(self) -> bool:
+        return self.healthy is not None or bool(self.dead_links)
+
+    def with_health(self, healthy=None, dead_links=()) -> "RoutedTransport":
+        """The same transport executing the plan recompiled around the
+        given failures (full health → the baseline fast paths)."""
+        return dataclasses.replace(self, healthy=healthy,
+                                   dead_links=dead_links)
+
+    @property
     def plan(self) -> RoutePlan:
-        return compile_routes(self.topology)
+        return compile_routes(self.topology, self.healthy, self.dead_links)
 
     @property
     def max_path_latency(self) -> int:
@@ -416,17 +771,31 @@ class RoutedTransport:
         if x.shape[0] != n:
             raise ValueError(
                 f"leading dim {x.shape[0]} != n_chips {n}")
-        me = self.chip_index()
+        # With block_size > 1 the mesh axis is finer than the topology:
+        # ``me`` indexes devices, ``pos`` the topology endpoint (pod).
+        me = self.chip_index() // self.block_size
         words = [jnp.int32(0)] * topo.n_ports
         backlog = [jnp.int32(0)] * topo.n_ports
 
-        if topo.kind == "direct":
-            y = self._inner.all_to_all(x)
+        if topo.kind == "pod":
+            y = self._pod_exchange(x, me, words, backlog)
+        elif topo.kind == "direct":
+            if self.block_size == 1:
+                y = self._inner.all_to_all(x)
+            else:
+                y = self._ring_stage(
+                    x, n, self._expand_perm([(c, (c + 1) % n)
+                                             for c in range(n)]),
+                    self._expand_perm([(c, (c - 1) % n) for c in range(n)]),
+                    me, words, backlog, 0, 0, count=False)
             off = _count_words(x) - _count_words(jnp.take(x, me, axis=0))
             words[0] = off
             backlog[0] = self._excess(off)
         elif topo.kind == "torus":
-            y = self._torus_exchange(x, me, words, backlog)
+            if self.degraded:
+                y = self._cube_exchange(x, me, words, backlog)
+            else:
+                y = self._torus_exchange(x, me, words, backlog)
         else:
             y = self._tree_exchange(x, me, words, backlog)
 
@@ -451,6 +820,15 @@ class RoutedTransport:
 
     # -- torus: dimension-ordered hop-by-hop forwarding ---------------------
 
+    def _expand_perm(
+            self, perm: list[tuple[int, int]]) -> list[tuple[int, int]]:
+        """Lift a topology-endpoint permutation onto the device axis: every
+        member lane of endpoint a moves to the same lane of endpoint b."""
+        bs = self.block_size
+        if bs == 1:
+            return perm
+        return [(a * bs + i, b * bs + i) for a, b in perm for i in range(bs)]
+
     def _dim_perm(self, dim: int, delta: int) -> list[tuple[int, int]]:
         """The flat-axis permutation advancing every chip's coordinate
         ``dim`` by ``delta`` (all rings of that dimension shift at once)."""
@@ -461,7 +839,7 @@ class RoutedTransport:
             stepped = coords[c].copy()
             stepped[dim] = (stepped[dim] + delta) % dims[dim]
             perm.append((c, int(np.ravel_multi_index(tuple(stepped), dims))))
-        return perm
+        return self._expand_perm(perm)
 
     def _torus_exchange(self, x, me, words, backlog):
         topo = self.topology
@@ -475,6 +853,52 @@ class RoutedTransport:
                 mycoords[i], words, backlog, 2 * i, 2 * i + 1)
             buf = jnp.moveaxis(b, 0, i)
         return buf.reshape(x.shape)
+
+    # -- degraded torus: generic next-hop relay over the BFS detour plan ----
+
+    def _port_perms(self) -> list[list[tuple[int, int]]]:
+        """One neighbor permutation per torus port (2i = dim i forward,
+        2i+1 = backward) — the wire behind each port."""
+        return [self._dim_perm(p // 2, +1 if p % 2 == 0 else -1)
+                for p in range(2 * len(self.topology.dims))]
+
+    def _cube_exchange(self, x, me, words, backlog):
+        """Execute an arbitrary next-hop plan (the BFS detour tables of a
+        degraded torus) with a store-and-forward relay.
+
+        Dimension-ordered ring stages cannot follow detours, so each chip
+        instead holds a cube ``[src, dest, *payload]`` of in-flight blocks:
+        every round, for every port p, the blocks whose next hop from here
+        uses p (``plan.port[me, dest] == p`` — egress depends only on the
+        destination, so a relayed block follows the BFS tree consistently)
+        are sent over that port's ``ppermute`` and merged lane-wise at the
+        receiver.  Block (src, dest) is globally unique and owns its cube
+        slot, so the ``where(recv >= 0, recv, cube)`` merge never
+        collides.  Blocks reach their destination after ``hops[src, dest]``
+        rounds and park there (``port == -1``); ``max(hops)`` rounds drain
+        everything.  O(n²·payload) per-chip memory — a recovery-boundary
+        path, not the steady-state hot path.
+        """
+        topo = self.topology
+        n = topo.n_chips
+        plan = self.plan
+        rounds = int(max(plan.hops.max(), 0))
+        myports = jnp.take(jnp.asarray(plan.port, jnp.int32), me, axis=0)
+        smask = (jnp.arange(n) == me).reshape((n,) + (1,) * x.ndim)
+        cube = jnp.where(smask, x[None],
+                         jnp.full((n,) + x.shape, ev.WORD_SENTINEL, x.dtype))
+        perms = self._port_perms()
+        for _ in range(rounds):
+            for p, perm in enumerate(perms):
+                e = (myports == p).reshape((1, n) + (1,) * (x.ndim - 1))
+                send = jnp.where(e, cube, ev.WORD_SENTINEL)
+                sent = _count_words(send)
+                words[p] = words[p] + sent
+                backlog[p] = backlog[p] + self._excess(sent)
+                cube = jnp.where(e, ev.WORD_SENTINEL, cube)
+                recv = jax.lax.ppermute(send, self.axis, perm)
+                cube = jnp.where(recv >= 0, recv, cube)
+        return jnp.take(cube, me, axis=1)
 
     def _ring_stage(self, buf, k, perm_fwd, perm_bwd, pos, words, backlog,
                     port_f, port_b, count=True):
@@ -526,7 +950,7 @@ class RoutedTransport:
             gg, mm = divmod(c, m)
             perm.append((c, ((gg + group_step) % g) * m
                          + (mm + member_step) % m))
-        return perm
+        return self._expand_perm(perm)
 
     def _tree_exchange(self, x, me, words, backlog):
         topo = self.topology
@@ -539,7 +963,8 @@ class RoutedTransport:
         per_block = jnp.sum(
             (x >= 0).astype(jnp.int32).reshape(topo.n_chips, -1), axis=1)
         words[TREE_UP_CHIP] = jnp.sum(jnp.where(off, per_block, 0))
-        words[TREE_UP_TRUNK] = jnp.sum(jnp.where(cross, per_block, 0))
+        if not self.degraded:
+            words[TREE_UP_TRUNK] = jnp.sum(jnp.where(cross, per_block, 0))
 
         # Stage 1 — members exchange within each group (the FPGA crossbar):
         # after it, block [dest_group, mm] holds this group's member-mm
@@ -561,8 +986,80 @@ class RoutedTransport:
         per_block_in = jnp.sum(
             (y >= 0).astype(jnp.int32).reshape(topo.n_chips, -1), axis=1)
         words[TREE_DOWN_CHIP] = jnp.sum(jnp.where(off, per_block_in, 0))
-        words[TREE_DOWN_TRUNK] = jnp.sum(jnp.where(cross, per_block_in, 0))
+        if not self.degraded:
+            words[TREE_DOWN_TRUNK] = jnp.sum(jnp.where(cross, per_block_in, 0))
+        else:
+            # Trunk-share re-homing: cross-group words are billed to the
+            # carrier chip (see tree_carriers), so each chip broadcasts its
+            # cross counts and sums the ones it carries.
+            cu, cd = tree_carriers(topo, self.healthy, self.dead_links)
+            up_cross = jnp.sum(jnp.where(cross, per_block, 0))
+            dn_cross = jnp.sum(jnp.where(cross, per_block_in, 0))
+            # int32[n]: chip c's cross words, assembled across the axis
+            vec = self.psum(jnp.where(idx == me, up_cross, 0))
+            vec_in = self.psum(jnp.where(idx == me, dn_cross, 0))
+            words[TREE_UP_TRUNK] = jnp.sum(
+                jnp.where(jnp.asarray(cu) == me, vec, 0)).astype(jnp.int32)
+            words[TREE_DOWN_TRUNK] = jnp.sum(
+                jnp.where(jnp.asarray(cd) == me, vec_in, 0)).astype(jnp.int32)
         for p in (TREE_UP_CHIP, TREE_DOWN_CHIP, TREE_UP_TRUNK,
                   TREE_DOWN_TRUNK):
             backlog[p] = self._excess(words[p])
         return y
+
+    # -- pod: dense member crossbar below a routed inter-pod graph ----------
+
+    def _member_perm(self, delta: int) -> list[tuple[int, int]]:
+        """Rotate the member lane within each pod (flat-axis realization of
+        the pod-local crossbar)."""
+        m = self.topology.chips_per_group
+        return [(c, (c // m) * m + (c % m + delta) % m)
+                for c in range(self.topology.n_chips)]
+
+    def _pod_exchange(self, x, me, words, backlog):
+        """Two-level exchange: stage 1 moves every word onto its
+        destination-member lane (one dense crossbar within each pod), stage
+        2 carries the lane-major slabs over the inter-pod graph with a
+        recursive :class:`RoutedTransport` — member lanes in lockstep
+        (``block_size``) on a flat axis, or natively over ``pod_axis`` when
+        ``axis=("pod", "chip")``.  Pod-link words are billed to the
+        destination-member lane that carries them; the pod_local port
+        counts words leaving their source member lane.  Equals the dense
+        hierarchical exchange bitwise (same split/concat scheme as
+        ``ShardMapTransport._a2a``), modulo the modeled latency.
+        """
+        topo = self.topology
+        m, npods, n = topo.chips_per_group, topo.n_pods, topo.n_chips
+        mesh = isinstance(self.axis, tuple)
+        mymem = (jax.lax.axis_index(self.axis[1]) if mesh
+                 else me % m)
+
+        idx = jnp.arange(n)
+        per_dest = jnp.sum(
+            (x >= 0).astype(jnp.int32).reshape(n, -1), axis=1)
+        words[0] = jnp.sum(jnp.where(idx % m != mymem, per_dest, 0))
+        backlog[0] = self._excess(words[0])
+
+        buf = x.reshape((npods, m) + x.shape[1:])
+        if mesh:
+            z = jax.lax.all_to_all(buf, self.axis[1], split_axis=1,
+                                   concat_axis=1, tiled=True)
+            sub_axis, sub_bs = self.axis[0], 1
+        else:
+            b = jnp.moveaxis(buf, 1, 0)          # [m_dest, npods, ...]
+            b = self._ring_stage(
+                b, m, self._member_perm(+1), self._member_perm(-1), mymem,
+                words, backlog, 0, 0, count=False)
+            z = jnp.moveaxis(b, 0, 1)            # [npods, m_src, ...]
+            sub_axis, sub_bs = self.axis, m
+        # z[Q, i] = traffic from chip (mypod, i) toward chip (Q, mymem).
+        sub = RoutedTransport(topology=topo.pod_graph, axis=sub_axis,
+                              apply_latency=False,
+                              flush_rounds=self.flush_rounds,
+                              block_size=sub_bs)
+        w, sub_words, sub_backlog = sub.exchange_words(z)
+        for p in range(topo.pod_graph.n_ports):
+            words[1 + p] = sub_words[p]
+            backlog[1 + p] = sub_backlog[p]
+        # w[P, i] = slab from chip (P, i): already source-chip-major.
+        return w.reshape(x.shape)

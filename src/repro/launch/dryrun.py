@@ -240,7 +240,21 @@ def lower_snn(n_chips: int, mode: str = "simplified",
     devices = jax.devices()
     if len(devices) < n_chips:
         raise RuntimeError(f"need {n_chips} devices")
-    mesh = Mesh(np.asarray(devices[:n_chips]), ("chip",))
+    if topology is not None and topology.kind == "pod":
+        # Two-level ("pod", "chip") mesh: the chip axis is the dense
+        # intra-pod tier, the pod axis carries the routed pod graph.
+        n_pods = topology.n_pods
+        cpp = n_chips // n_pods
+        if n_pods * cpp != n_chips:
+            raise ValueError(f"{n_chips} chips != {n_pods} pods x {cpp}")
+        mesh = Mesh(np.asarray(devices[:n_chips]).reshape(n_pods, cpp),
+                    ("pod", "chip"))
+        axis: str | tuple = ("pod", "chip")
+        shard_axes = ("pod", "chip")
+    else:
+        mesh = Mesh(np.asarray(devices[:n_chips]), ("chip",))
+        axis = "chip"
+        shard_axes = "chip"
     comm = _dc.replace(BSS2.comm, n_chips=n_chips, mode=mode,
                        merge_rate=merge_rate)
     cfg = net.NetworkConfig(comm=comm, neuron_model=BSS2.neuron_model,
@@ -287,7 +301,7 @@ def lower_snn(n_chips: int, mode: str = "simplified",
             flow=opt(sq, state.flow), merge=opt(sq, state.merge),
             sendq=opt(sq, state.sendq))
         new_state, rec = net.shard_step(
-            cfg, "chip",
+            cfg, axis,
             net.NetworkParams(crossbar=sq(params.crossbar),
                               neuron=sq(params.neuron), table=sq(params.table)),
             local_state, ext[0],
@@ -301,7 +315,7 @@ def lower_snn(n_chips: int, mode: str = "simplified",
             ex(rec),
         )
 
-    chip = P("chip")
+    chip = P(shard_axes)
     rep = P()
     param_specs = net.NetworkParams(
         crossbar=jax.tree.map(lambda _: chip, params.crossbar),
@@ -332,9 +346,13 @@ def lower_snn(n_chips: int, mode: str = "simplified",
     tag = f"{n_chips}chips" if mode == "simplified" \
         else f"{n_chips}chips-merge{merge_rate}"
     if topology is not None:
-        tag += f"-{topology.kind}"
-        if topology.dims:
-            tag += "x".join(str(d) for d in topology.dims)
+        if topology.kind == "pod":
+            tag += (f"-pod{topology.n_pods}x{n_chips // topology.n_pods}"
+                    f"-{topology.pod_graph.kind}")
+        else:
+            tag += f"-{topology.kind}"
+            if topology.dims:
+                tag += "x".join(str(d) for d in topology.dims)
     return {
         "arch": "bss2-snn",
         "shape": tag,
@@ -357,7 +375,7 @@ def _stats_proto(c):
 
     return pc.CommStats(sent=0, overflow=0, merge_dropped=0, expired=0,
                         stalled=0, utilization=0, wire_bytes=0, traffic=0,
-                        link_words=0, link_backlog=0)
+                        link_words=0, link_backlog=0, lost_to_failure=0)
 
 
 # Per-arch optimized variants discovered by the §Perf hillclimbing
@@ -391,14 +409,23 @@ def main() -> None:
                     help="apply per-arch §Perf variants")
     ap.add_argument("--snn", action="store_true",
                     help="dry-run the paper's BSS-2 system (46 + 512 chips)")
+    ap.add_argument("--pod-only", action="store_true",
+                    help="with --snn: only the 512-chip (pod x chip) cell "
+                         "(the CI fault-drill smoke)")
     args = ap.parse_args()
 
     if args.snn:
         from repro.core import topology as tpo
 
+        # 512 chips as 8 pods x 64 chips: dense intra-pod exchange, routed
+        # ring of pods — the Extoll multi-wafer tier as a two-level mesh.
+        pod512 = tpo.pod(tpo.ring(8), 64)
         cells = [(46, "simplified", 0, None), (512, "simplified", 0, None),
                  (46, "full", 32, None),
-                 (64, "simplified", 0, tpo.torus2d(8, 8))]
+                 (64, "simplified", 0, tpo.torus2d(8, 8)),
+                 (512, "simplified", 0, pod512)]
+        if args.pod_only:
+            cells = [(512, "simplified", 0, pod512)]
         for n_chips, mode, merge_rate, topology in cells:
             r = lower_snn(n_chips, mode=mode, merge_rate=merge_rate,
                           topology=topology)

@@ -1,8 +1,19 @@
 from repro.runtime.fault import (
+    ChipFailure,
     FailureInjector,
     InjectedFailure,
+    RecoveryEvent,
+    ResilientRunner,
     StepTimer,
     TrainRunner,
 )
 
-__all__ = ["FailureInjector", "InjectedFailure", "StepTimer", "TrainRunner"]
+__all__ = [
+    "ChipFailure",
+    "FailureInjector",
+    "InjectedFailure",
+    "RecoveryEvent",
+    "ResilientRunner",
+    "StepTimer",
+    "TrainRunner",
+]

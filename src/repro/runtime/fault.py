@@ -1,7 +1,8 @@
 """Fault-tolerant training runtime: checkpoint/restart, failure injection,
-straggler detection, elastic restart.
+straggler detection, elastic restart, chip-failure recovery.
 
-Design for thousands of nodes (DESIGN.md §6):
+Design notes (see README.md §Fault tolerance and the CHANGES.md entries
+for PR 6; earlier revisions cited a DESIGN.md that never landed):
 
 * **Restart determinism.**  All run state = (params, optimizer state, EF
   residuals, step counter); the data stream is a pure function of
@@ -13,21 +14,34 @@ Design for thousands of nodes (DESIGN.md §6):
   timeout -> the job scheduler restarts the slice; our FailureInjector
   simulates that by raising at a chosen step.  Elasticity: restore with a
   *different* mesh (checkpoints are mesh-agnostic full arrays per leaf;
-  reshard-on-load places them onto whatever mesh the restarted job has —
-  e.g. 512 -> 448 healthy chips with a spare row blocked off).
+  ``resume_or(..., shardings=...)`` reshards-on-load onto whatever mesh
+  the restarted job has — e.g. 8 -> 6 healthy chips with a spare row
+  blocked off; tests/test_fault.py pins this).
 * **Straggler mitigation.**  StepTimer keeps an EWMA of step wall-time and
   flags steps > ``threshold``x the mean.  At the framework level the
   mitigations are (a) prefetch depth (data stragglers are absorbed by the
   queue — repro.data.Prefetcher), (b) synchronous SPMD makes compute
   stragglers a hardware-health signal -> the runner records them for the
   scheduler to evict the host at the next restart boundary.
+* **Fabric wiring (chip failure).**  :class:`ResilientRunner` closes the
+  loop with the pulse fabric (:mod:`repro.core.resilience`): the per-step
+  detector (heartbeat / credit watch) reports the surviving chip set; on
+  a new death the runner freezes the schedule via :class:`ChipFailure`,
+  restores the newest committed checkpoint, rebuilds the step function on
+  the degraded mesh (``PulseFabric.degrade`` recompiles routes around the
+  dead chips), and replays forward — in-flight events ride along in the
+  checkpointed retransmit ``SendQueue`` and are re-offered on the first
+  replayed step, with traffic to dead chips culled into
+  ``CommStats.lost_to_failure``.  The replayed trajectory is
+  bitwise-equal to an uninterrupted run on the degraded topology started
+  from the same checkpoint (tests/test_resilience.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 from repro import checkpoint as ckpt
 
@@ -84,11 +98,18 @@ class TrainRunner:
     injector: FailureInjector | None = None
     timer: StepTimer = dataclasses.field(default_factory=StepTimer)
 
-    def resume_or(self, init_state: Any) -> tuple[Any, int]:
+    def resume_or(self, init_state: Any, *,
+                  shardings: Any = None) -> tuple[Any, int]:
+        """Restore the newest committed checkpoint, or fall back to
+        ``init_state``.  ``shardings`` (optional pytree matching the
+        state) reshards each leaf on load — this is what lets a job
+        restarted on a *smaller* mesh (dead chips blocked off) consume
+        checkpoints written by the full mesh."""
         last = ckpt.latest_step(self.ckpt_dir)
         if last is None:
             return init_state, 0
-        state = ckpt.restore(self.ckpt_dir, last, init_state)
+        state = ckpt.restore(self.ckpt_dir, last, init_state,
+                             shardings=shardings)
         return state, last + 1
 
     def run(self, init_state: Any, n_steps: int) -> Any:
@@ -111,3 +132,104 @@ class TrainRunner:
                 writer.close()
             ckpt.gc_old(self.ckpt_dir, keep=self.keep)
         return state
+
+
+class ChipFailure(RuntimeError):
+    """A chip death was detected mid-run.  Carries the step it was
+    detected at and the surviving healthy chip set; raised by the
+    detector inside :class:`ResilientRunner`'s step wrapper to unwind
+    out of the checkpointed loop to the recovery boundary."""
+
+    def __init__(self, step: int, surviving: tuple):
+        self.step = int(step)
+        self.surviving = tuple(surviving)
+        super().__init__(
+            f"chip failure detected at step {self.step}; "
+            f"{len(self.surviving)} chips surviving")
+
+
+class RecoveryEvent(NamedTuple):
+    """One completed recovery: failure detected at ``detected_at``,
+    resumed from step ``resumed_from`` (== newest committed checkpoint
+    step + 1, or 0) on the surviving ``healthy`` chip set."""
+
+    detected_at: int
+    resumed_from: int
+    healthy: tuple
+
+
+@dataclasses.dataclass
+class ResilientRunner:
+    """Chip-failure recovery loop on top of :class:`TrainRunner`.
+
+    freeze -> restore -> recompile -> replay -> resume:
+
+    * ``make_step(healthy)`` builds the per-step function for a given
+      healthy chip set — rebuilding is where routes get recompiled
+      (``PulseFabric.degrade`` / ``NetworkConfig.healthy``).  It returns
+      ``step_fn(state, step) -> (state, record)``; records land in
+      ``self.records[step]`` and are pruned for replayed steps so the
+      final record stream is exactly the degraded-run stream.
+    * ``detect(state, step, healthy)`` inspects the post-step state
+      (heartbeat / credit watch observables from
+      :mod:`repro.core.resilience`) and returns the surviving chip
+      tuple, or ``None`` for "no change".  A strict shrink raises
+      :class:`ChipFailure`.
+    * On failure: unwind, restore the newest committed checkpoint,
+      rebuild the step function on the surviving mesh, and replay
+      forward.  In-flight events replay from the checkpointed retransmit
+      SendQueue; traffic to dead chips is culled into
+      ``CommStats.lost_to_failure``.  Checkpointing is synchronous here:
+      the recovery boundary must only ever see committed state.
+    """
+
+    make_step: Callable[[tuple], Callable[[Any, int], tuple]]
+    detect: Callable[[Any, int, tuple], tuple | None]
+    ckpt_dir: str
+    n_chips: int
+    ckpt_every: int = 10
+    keep: int = 3
+    max_recoveries: int = 4
+    records: dict = dataclasses.field(default_factory=dict)
+    recoveries: list = dataclasses.field(default_factory=list)
+
+    def run(self, init_state: Any, n_steps: int,
+            healthy: tuple | None = None) -> tuple:
+        """Run to ``n_steps``, recovering from chip deaths along the way.
+
+        Returns ``(final_state, healthy)`` — the surviving chip set the
+        run finished on.  Raises the final :class:`ChipFailure` if more
+        than ``max_recoveries`` recoveries are needed.
+        """
+        healthy = (tuple(range(self.n_chips)) if healthy is None
+                   else tuple(sorted(healthy)))
+        while True:
+            inner = self.make_step(healthy)
+
+            def step_fn(state, step, _inner=inner, _healthy=healthy):
+                state, record = _inner(state, step)
+                self.records[step] = record
+                surviving = self.detect(state, step, _healthy)
+                if surviving is not None:
+                    surviving = tuple(sorted(surviving))
+                    if surviving != _healthy:
+                        raise ChipFailure(step, surviving)
+                return state
+
+            runner = TrainRunner(
+                step_fn=step_fn, ckpt_dir=self.ckpt_dir,
+                ckpt_every=self.ckpt_every, keep=self.keep,
+                async_ckpt=False)
+            try:
+                return runner.run(init_state, n_steps), healthy
+            except ChipFailure as failure:
+                if len(self.recoveries) >= self.max_recoveries:
+                    raise
+                last = ckpt.latest_step(self.ckpt_dir)
+                resume_at = 0 if last is None else last + 1
+                for s in [s for s in self.records if s >= resume_at]:
+                    del self.records[s]
+                healthy = failure.surviving
+                self.recoveries.append(RecoveryEvent(
+                    detected_at=failure.step, resumed_from=resume_at,
+                    healthy=healthy))

@@ -58,6 +58,11 @@ class NetworkConfig:
     record_voltage: bool = True
     flow: fb.FlowControlConfig | None = None   # optional credit back-pressure
     topology: tpo.Topology | None = None       # switched network (None=dense)
+    # Resilience: run on a degraded fabric — routes recompiled around the
+    # failures, unreachable traffic culled into CommStats.lost_to_failure
+    # (see repro.core.resilience; dead_links needs a topology).
+    healthy: Any = None                # alive chips (indices / bool mask)
+    dead_links: tuple = ()             # cut (chip, port) pairs
 
     def __post_init__(self):
         if self.neuron_model not in ("lif", "adex"):
@@ -102,7 +107,8 @@ def local_fabric(cfg: NetworkConfig) -> fb.PulseFabric:
     """The fabric binding used by the single-device forms (routed through
     ``cfg.topology`` when one is configured)."""
     transport = cfg.topology if cfg.topology is not None else "local"
-    return fb.PulseFabric(cfg.comm, transport=transport, flow=cfg.flow)
+    return fb.PulseFabric(cfg.comm, transport=transport, flow=cfg.flow,
+                          healthy=cfg.healthy, dead_links=cfg.dead_links)
 
 
 def shard_fabric(cfg: NetworkConfig,
@@ -112,7 +118,8 @@ def shard_fabric(cfg: NetworkConfig,
         transport = tpo.RoutedTransport(topology=cfg.topology, axis=axis)
     else:
         transport = tp.ShardMapTransport(axis=axis, n_chips=cfg.comm.n_chips)
-    return fb.PulseFabric(cfg.comm, transport=transport, flow=cfg.flow)
+    return fb.PulseFabric(cfg.comm, transport=transport, flow=cfg.flow,
+                          healthy=cfg.healthy, dead_links=cfg.dead_links)
 
 
 def init_params(
@@ -194,6 +201,7 @@ def _zero_stats(c: pc.PulseCommConfig) -> pc.CommStats:
         wire_bytes=z, traffic=jnp.zeros((c.n_chips, c.n_chips), jnp.int32),
         link_words=jnp.zeros((c.n_chips, 1), jnp.int32),
         link_backlog=jnp.zeros((c.n_chips, 1), jnp.int32),
+        lost_to_failure=z,
     )
 
 

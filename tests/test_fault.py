@@ -1,6 +1,10 @@
 """Fault-tolerance drills: kill the training loop mid-run and prove the
 restarted run reproduces the uninterrupted one exactly."""
 
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -70,6 +74,60 @@ def test_restart_from_scratch_when_no_checkpoint(tiny, tmp_path):
                          ckpt_every=100, async_ckpt=False)
     state, start = runner.resume_or(init_state)
     assert start == 0
+
+
+_RESHARD_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro import checkpoint as ckpt
+    from repro.runtime import TrainRunner
+
+    devs = jax.devices()
+    d = tempfile.mkdtemp()
+
+    # a run on the full 8-chip mesh writes a checkpoint at step 4
+    big = Mesh(np.asarray(devs[:8]), ("chip",))
+    state = {
+        "w": jax.device_put(jnp.arange(96, dtype=jnp.float32).reshape(24, 4),
+                            NamedSharding(big, P("chip"))),
+        "b": jax.device_put(jnp.arange(8.0), NamedSharding(big, P())),
+    }
+    ckpt.save(state, d, step=4)
+
+    # the restarted job only has 6 healthy chips: resume_or(..., shardings=)
+    # reshards each mesh-agnostic full-array leaf onto the smaller mesh
+    small = Mesh(np.asarray(devs[:6]), ("chip",))
+    shardings = {"w": NamedSharding(small, P("chip")),
+                 "b": NamedSharding(small, P())}
+    runner = TrainRunner(step_fn=lambda s, t: s, ckpt_dir=d)
+    target = jax.tree.map(jnp.zeros_like, state)
+    got, start = runner.resume_or(target, shardings=shardings)
+
+    assert start == 5, start
+    for k in state:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(state[k]))
+        assert got[k].sharding.mesh.devices.shape == (6,), k
+    assert len(got["w"].addressable_shards) == 6
+    assert got["w"].addressable_shards[0].data.shape == (4, 4)
+    print("RESHARD_ON_LOAD_OK")
+""")
+
+
+def test_resume_or_reshards_onto_smaller_mesh():
+    """Elastic restart: a checkpoint written by an 8-chip mesh restores
+    onto a 6-chip mesh (two dead chips blocked off) via
+    ``resume_or(..., shardings=...)`` — same values, new placement."""
+    out = subprocess.run(
+        [sys.executable, "-c", _RESHARD_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert "RESHARD_ON_LOAD_OK" in out.stdout, out.stderr[-3000:]
 
 
 def test_straggler_detection():

@@ -245,7 +245,9 @@ def _fabric_setup(topo, n_neurons=24, mode="simplified", bpc=1, rate=0.5,
 @pytest.mark.parametrize("topo", [
     tpo.torus2d(4, 4, link_latency=0),
     tpo.switch_tree(4, 4, link_latency=0, trunk_latency=0),
-], ids=lambda t: t.kind)
+    tpo.ring(16, link_latency=0),
+    tpo.torus3d(4, 2, 2, link_latency=0),
+], ids=lambda t: f"{t.kind}{t.dims}")
 def test_fabric_over_topology_zero_latency_matches_dense(topo):
     """Acceptance: PulseFabric over a >= 3-hop torus2d and a switch_tree
     delivers the same spike trains as the dense transport (zero modeled
@@ -269,7 +271,9 @@ def test_fabric_over_topology_zero_latency_matches_dense(topo):
 @pytest.mark.parametrize("topo", [
     tpo.torus2d(4, 4, link_latency=1),
     tpo.switch_tree(4, 4, link_latency=1, trunk_latency=1),
-], ids=lambda t: t.kind)
+    tpo.ring(16, link_latency=1),
+    tpo.torus3d(4, 2, 2, link_latency=1),
+], ids=lambda t: f"{t.kind}{t.dims}")
 def test_fabric_topology_latency_equals_compensated_dense_spike_trains(topo):
     """Acceptance (latency half): a routed network with per-hop latency
     delivers exactly the spike trains of a DENSE network whose routing
