@@ -53,6 +53,7 @@ GATED_PREFIXES = (
     "aggregation_capacity_",
     "topology_",
     "superstep_B",
+    "pipeline_",
     "resilience_",
     "pod_",
 )

@@ -1,0 +1,166 @@
+"""Benchmark: serial vs pipelined superstep schedule, per topology.
+
+The pipelined schedule (``PulseFabric.run_pipelined``) issues block f's
+fused exchange BEFORE draining block f-1 and concurrently with block
+f+1's inject compute, so the collective's launch+transfer cost hides
+under neighbour-block compute instead of serializing with it.  Delivery
+stays bitwise-equal to the serial schedule (pinned in
+tests/test_pipeline.py); this sweep measures what the overlap buys.
+
+Three timings per topology, same F-block spike load:
+
+  * serial   — the incumbent driving methodology: one ``jit_superstep``
+    dispatch per block, ring threaded on the host.  This is what
+    ``snn.network`` did before the pipelined scan, so the serial rows
+    are the before-side of the deliverable.
+  * fused    — ablation: the same F serial blocks unrolled inside ONE
+    jit.  Separates dispatch amortization (serial - fused) from genuine
+    communication/compute overlap (fused - piped); reported in
+    ``derived`` only.
+  * piped    — one ``jit_run_pipelined`` call over the [F, B] load.
+
+Rows land in ``benchmarks/run.py --json`` (BENCH_fabric.json) under the
+gated ``pipeline_`` prefix, so the serial-vs-pipelined gap per topology
+is tracked across PRs next to the superstep_B and topology_ rows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.aggregation import time_loop
+from benchmarks.topology import _topologies
+from repro.core import delays as dl
+from repro.core import events as ev
+from repro.core import pulse_comm as pc
+from repro.core import routing as rt
+from repro.core.fabric import PulseFabric
+
+
+def _block_load(key, n_blocks, superstep, n_chips, n_neurons, rate):
+    """[F, B] event blocks whose times track the block clock — block f
+    substep k fires at t = f*B + k, as a streaming driver would emit."""
+    ks = jax.random.split(key, n_blocks * superstep)
+    ebs = []
+    for f in range(n_blocks):
+        sub = []
+        for k in range(superstep):
+            t = f * superstep + k
+            spikes = jax.random.uniform(
+                ks[f * superstep + k], (n_chips, n_neurons)) < rate
+            sub.append(jax.vmap(
+                lambda s: ev.from_spikes(s, t, n_neurons)[0])(spikes))
+        ebs.append(jax.tree.map(lambda *xs: jnp.stack(xs), *sub))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ebs)
+
+
+def _serial_blocks(fab, n_blocks):
+    """Per-block dispatch driver: F host-side ``jit_superstep`` calls."""
+    B = fab.cfg.superstep
+    sstep = fab.jit_superstep()
+
+    def run(blocks, tables, rings):
+        ring, out = rings, None
+        for f in range(n_blocks):
+            blk = jax.tree.map(lambda a: a[f], blocks)
+            out = sstep(blk, tables, ring)
+            ring = dl.DelayRing(ring=out.ring.ring, now=out.ring.now + B)
+        return ring, out.delivered
+    return run
+
+
+def _fused_serial(fab, n_blocks):
+    """Ablation: the same F serial blocks unrolled inside one jit."""
+    B = fab.cfg.superstep
+
+    def run(blocks, tables, rings):
+        ring, dels = rings, []
+        for f in range(n_blocks):
+            blk = jax.tree.map(lambda a: a[f], blocks)
+            res = fab.superstep(blk, tables, ring)
+            ring = dl.DelayRing(ring=res.ring.ring, now=res.ring.now + B)
+            dels.append(res.delivered.words)
+        return ring, jnp.stack(dels)
+    return jax.jit(run)
+
+
+def pipeline_sweep(n_blocks=6, superstep=4, n_chips=16, n_neurons=128,
+                   rate=0.3, seed=3, reps=10):
+    """Serial vs fused vs pipelined us/step per topology.
+
+    Delays sit at 10..14 so every word's slack clears the pipelined
+    two-block wait (diff > 2B-1 = 7) — the regime where the schedules are
+    bitwise-equal and the comparison is purely about overlap.
+    """
+    key = jax.random.PRNGKey(seed)
+    cfg = pc.PulseCommConfig(
+        n_chips=n_chips, neurons_per_chip=n_neurons,
+        n_inputs_per_chip=n_neurons, event_capacity=n_neurons,
+        bucket_capacity=16, ring_depth=16, superstep=superstep)
+    table = rt.random_table(key, n_neurons, n_chips, max_delay=14,
+                            min_delay=10)
+    tables = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_chips,) + x.shape), table)
+    blocks = _block_load(key, n_blocks, superstep, n_chips, n_neurons,
+                         rate)
+    rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
+        jnp.arange(n_chips))
+    steps = n_blocks * superstep
+
+    rows = []
+    for name, topo in _topologies(n_chips):
+        fab = PulseFabric(cfg, transport=topo)
+        us_serial = time_loop(_serial_blocks(fab, n_blocks),
+                              blocks, tables, rings, reps=reps) / steps
+        us_fused = time_loop(_fused_serial(fab, n_blocks),
+                             blocks, tables, rings, reps=reps) / steps
+        piped = fab.jit_run_pipelined()
+        us_piped = time_loop(piped, blocks, tables, rings,
+                             reps=reps) / steps
+        res = piped(blocks, tables, rings)
+        rows.append({
+            "topology": name,
+            "superstep": superstep,
+            "n_blocks": n_blocks,
+            "us_serial": us_serial,
+            "us_fused": us_fused,
+            "us_piped": us_piped,
+            "wire_bytes": int(np.asarray(res.stats.wire_bytes).sum())
+            // steps,
+            "expired": int(np.asarray(res.stats.expired).sum()),
+        })
+    dense = next(r for r in rows if r["topology"] == "dense")
+    for r in rows:
+        r["gap_vs_dense"] = r["us_piped"] / dense["us_piped"]
+    return rows
+
+
+def main(csv=True, smoke=False):
+    """Returns rows of (name, us_per_call, wire_bytes, derived).
+
+    Like the topology sweep, ``--smoke`` keeps the full 16-chip cells
+    (the pipeline_* row names are part of the committed-baseline
+    contract) and only trims the timing reps.
+    """
+    out = []
+    for r in pipeline_sweep(reps=4 if smoke else 10):
+        base = "%s_B%d" % (r["topology"], r["superstep"])
+        out.append((
+            "pipeline_serial_%s" % base, r["us_serial"], r["wire_bytes"],
+            f"fused={r['us_fused']:.1f};F={r['n_blocks']};"
+            f"expired={r['expired']}"))
+        out.append((
+            "pipeline_piped_%s" % base, r["us_piped"], r["wire_bytes"],
+            f"speedup={r['us_serial'] / r['us_piped']:.2f}x;"
+            f"vs_fused={r['us_fused'] / r['us_piped']:.2f}x;"
+            f"gap_vs_dense={r['gap_vs_dense']:.2f}x"))
+    if csv:
+        for name, us, wire, derived in out:
+            print(f"{name},{us:.1f},{wire},{derived}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

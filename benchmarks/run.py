@@ -35,12 +35,12 @@ def main(argv=None) -> None:
     args = p.parse_args(argv)
 
     from benchmarks import (aggregation, latency, lm_roofline, loss_budget,
-                            resilience, topology)
+                            pipeline, resilience, topology)
 
     print("name,us_per_call,wire_bytes,derived")
     rows = []
-    for mod in (aggregation, topology, resilience, latency, loss_budget,
-                lm_roofline):
+    for mod in (aggregation, topology, pipeline, resilience, latency,
+                loss_budget, lm_roofline):
         rows.extend(mod.main(csv=True, smoke=args.smoke))
 
     if args.json:

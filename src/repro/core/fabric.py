@@ -178,6 +178,16 @@ class FabricResult(NamedTuple):
     ``sendq`` is None unless the flow config enables the bounded
     retransmit queue (``retransmit_depth > 0``).  All three are carries:
     thread them into the next :meth:`PulseFabric.step`.
+
+    ``pending`` is the pipelined schedule's in-flight carry (a
+    :class:`repro.core.pulse_comm.PipelineCarry`): None from the serial
+    drivers (:meth:`PulseFabric.step` / :meth:`PulseFabric.superstep`),
+    the issued-but-undrained block from :meth:`PulseFabric.
+    pipeline_block` — thread it into the next pipelined call and flush it
+    with :meth:`PulseFabric.flush_pending` at the end of a run.  Note the
+    field is appended: positional construction of pre-pipeline
+    FabricResults keeps working, but code that built results positionally
+    AND passed ``pending`` must use keywords.
     """
 
     ring: dl.DelayRing
@@ -186,6 +196,7 @@ class FabricResult(NamedTuple):
     flow: fc.RingState | None
     merge: mg.MergeBuffer | None = None
     sendq: fc.SendQueue | None = None
+    pending: pc.PipelineCarry | None = None
 
 
 class PulseFabric:
@@ -502,10 +513,39 @@ class PulseFabric:
         (tests/test_superstep.py); the returned ``delivered`` / ``stats``
         carry a leading substep axis and ``ring.now`` is left at ``t0``
         (the caller owns the clock, exactly as for :meth:`step`).
+
+        The three phases live in :meth:`_inject_block` (1),
+        :func:`repro.core.pulse_comm.exchange_flush_issue` (2) and
+        :meth:`_drain_block` (3) — the pipelined schedule
+        (:meth:`_chip_pipeline_block`) reuses the same pieces but drains
+        the *previous* block's issued exchange instead of its own.
+        """
+        t0 = ring.now
+        slab, inject, flow, sendq = self._inject_block(
+            events, table, flow, sendq, t0)
+        issued = pc.exchange_flush_issue(self.cfg, self.transport, slab)
+        ring, delivered, stats, merge = self._drain_block(
+            ring, merge, issued, inject, t0)
+        return ring, delivered, stats, flow, merge, sendq
+
+    def _inject_block(
+        self,
+        events: ev.EventBuffer,
+        table: rt.RoutingTable,
+        flow: fc.RingState | None,
+        sendq: fc.SendQueue | None,
+        t0: jax.Array,
+    ) -> tuple[jax.Array, pc.InjectStats, fc.RingState | None,
+               fc.SendQueue | None]:
+        """Phase 1 for one chip: per substep k (clock ``t0 + k``) route,
+        admit into the wrap window with the remaining deferral as extra
+        slack, credit-gate and flush-pack into column k of the FlushBuffer
+        slab.  Returns ``(slab, inject_stats, flow, sendq)`` — the filled
+        ``int32[n_buckets, B, capacity]`` slab plus the per-substep
+        source-side accounting the drain later folds into CommStats.
         """
         cfg = self.cfg
         b = events.addr.shape[0]
-        t0 = ring.now
         flushbuf = pc.flush_init(cfg)
         inject_stats = []
         reach_row = None
@@ -584,8 +624,67 @@ class PulseFabric:
                              / float(cfg.bucket_capacity)),
             ))
 
-        delivered_words, link = pc.exchange_flush(
-            cfg, self.transport, flushbuf.slab)
+        stack = lambda key: jnp.stack([s[key] for s in inject_stats])
+        inject = pc.InjectStats(
+            sent=stack("sent"), overflow=stack("overflow"),
+            stalled=stack("stalled"), wrap_expired=stack("wrap_expired"),
+            lost=stack("lost"), wire_bytes=stack("wire_bytes"),
+            utilization=stack("utilization"), traffic=stack("traffic"))
+        return flushbuf.slab, inject, flow, sendq
+
+    def _drain_block(
+        self,
+        ring: dl.DelayRing,
+        merge: mg.MergeBuffer | None,
+        issued: pc.IssuedFlush,
+        inject: pc.InjectStats,
+        t0: jax.Array,
+        *,
+        extra_ahead: int = 0,
+        valid: jax.Array | None = None,
+    ) -> tuple[dl.DelayRing, pc.Delivered, pc.CommStats,
+               mg.MergeBuffer | None]:
+        """Phase 3 for one chip: complete the issued exchange and replay
+        the per-step schedule at the destination — merge substep k's
+        arrivals against clock ``t0 + k`` and deposit with exactly the
+        judgment the B=1 schedule would have applied.
+
+        ``extra_ahead`` widens the deposit guard for the pipelined
+        schedule: a block drained one block late has had the *following*
+        block's slots popped too, so deposits must clear ``B`` additional
+        slots (``min_ahead = extra_ahead + defer_k``) — a word landing
+        inside the already-popped window is expired with accounting
+        instead of ghosting a ring revolution later.  ``valid`` (a scalar
+        bool) gates the whole drain: an empty pipeline carry masks its
+        words to sentinels and leaves the merge queue untouched, so the
+        prologue block contributes nothing.
+        """
+        cfg = self.cfg
+        delivered_words, link = pc.exchange_flush_complete(
+            cfg, self.transport, issued)
+        b = delivered_words.shape[0]
+        if valid is not None:
+            delivered_words = jnp.where(
+                valid, delivered_words, jnp.int32(ev.WORD_SENTINEL))
+        lost_drain = jnp.zeros((b,), jnp.int32)
+        if self._deliverable is not None:
+            # Already-exchanged words can still be addressed to a chip
+            # that died while they were in flight (a pipeline carry
+            # restored across a recovery boundary): cull arrivals at a
+            # dead destination into lost_to_failure rather than silently
+            # depositing them into a dead chip's ring.  On the serial
+            # schedule nothing ever arrives at a dead chip (sources cull
+            # at inject), so this is the identity there.
+            me = self.transport.chip_index()
+            dele = jnp.asarray(self._deliverable)
+            alive_self = jnp.take(dele.reshape(-1),
+                                  me * cfg.n_chips + me)
+            lost_drain = jnp.where(
+                alive_self, 0,
+                jnp.sum(ev.word_valid(delivered_words).astype(jnp.int32),
+                        axis=1))
+            delivered_words = jnp.where(
+                alive_self, delivered_words, jnp.int32(ev.WORD_SENTINEL))
 
         merge_out = None
         merge_dropped = jnp.zeros((b,), jnp.int32)
@@ -598,10 +697,20 @@ class PulseFabric:
             # delivered == emitted + queued + dropped holds every substep
             # by construction.  The sort key comes straight from the low
             # bits of the words — no decode on the hot path.
-            merge, merge_out, merge_dropped = mg.merge_drain_words(
+            new_merge, merge_out, merge_dropped = mg.merge_drain_words(
                 merge, delivered_words, now0=t0, rate=cfg.merge_rate,
                 use_pallas=cfg.use_pallas,
             )
+            if valid is not None:
+                # An empty carry must not advance the merge queue (its
+                # sentinel drain would still emit queued words).
+                merge = jax.tree.map(
+                    lambda n, o: jnp.where(valid, n, o), new_merge, merge)
+                merge_out = jnp.where(valid, merge_out,
+                                      jnp.int32(ev.WORD_SENTINEL))
+                merge_dropped = jnp.where(valid, merge_dropped, 0)
+            else:
+                merge = new_merge
 
         out_words, stats_steps = [], []
         for k in range(b):
@@ -614,19 +723,18 @@ class PulseFabric:
             else:
                 words_k = delivered_words[k]
             ring, dep_expired = dl.deposit_words(
-                ring, words_k, now=now_k, min_ahead=defer_k)
+                ring, words_k, now=now_k, min_ahead=extra_ahead + defer_k)
             out_words.append(words_k)
-            inj = inject_stats[k]
             last = k == b - 1
             stats_steps.append(pc.CommStats(
-                sent=inj["sent"],
-                overflow=inj["overflow"],
+                sent=inject.sent[k],
+                overflow=inject.overflow[k],
                 merge_dropped=jnp.asarray(merge_dropped[k], jnp.int32),
-                expired=inj["wrap_expired"] + dep_expired,
-                stalled=inj["stalled"],
-                utilization=inj["utilization"],
-                wire_bytes=inj["wire_bytes"],
-                traffic=inj["traffic"],
+                expired=inject.wrap_expired[k] + dep_expired,
+                stalled=inject.stalled[k],
+                utilization=inject.utilization[k],
+                wire_bytes=inject.wire_bytes[k],
+                traffic=inject.traffic[k],
                 # The collective fires once per block: its link occupancy
                 # is attributed to the flush substep (zeros elsewhere).
                 # Per-block link_words totals match the per-step schedule
@@ -637,12 +745,12 @@ class PulseFabric:
                     link.words),
                 link_backlog=link.backlog if last else jnp.zeros_like(
                     link.backlog),
-                lost_to_failure=inj["lost"],
+                lost_to_failure=inject.lost[k] + lost_drain[k],
             ))
 
         delivered = pc.Delivered(words=jnp.stack(out_words))
         stats = jax.tree.map(lambda *xs: jnp.stack(xs), *stats_steps)
-        return ring, delivered, stats, flow, merge, sendq
+        return ring, delivered, stats, merge
 
     def _chip_step(
         self,
@@ -765,3 +873,291 @@ class PulseFabric:
                                      sendq))
         return FabricResult(ring=ring, delivered=delivered, stats=stats,
                             flow=flow, merge=merge, sendq=sendq)
+
+    # -- pipelined superstep schedule ----------------------------------------
+
+    @property
+    def _n_ports(self) -> int:
+        """Port count of the transport's per-exchange link stats (the
+        leading dim a :class:`repro.core.pulse_comm.PipelineCarry`'s link
+        leg must match)."""
+        topo = getattr(self.transport, "topology", None)
+        return topo.n_ports if topo is not None else 1
+
+    def init_pending(self) -> pc.PipelineCarry:
+        """An empty pipeline carry (``valid=False``) — batched over chips
+        on the local path.  The prologue block of the pipelined schedule:
+        draining it deposits nothing and contributes zero stats."""
+        carry = pc.pipeline_init(self.cfg, self._n_ports)
+        if self.batched:
+            carry = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.cfg.n_chips,) + x.shape),
+                carry,
+            )
+        return carry
+
+    def _check_pipeline_guard(self) -> None:
+        """Tighten the wrap guard for the pipelined schedule: a word now
+        waits up to *two* blocks (its own deferral plus one block in the
+        pipeline carry) before deposit, so the end-to-end wait
+        ``2B + path latency + ring_depth`` must stay inside the 8-bit
+        half-window or a carried word could alias onto a future deadline
+        instead of expiring with accounting."""
+        max_lat = int(getattr(self.transport, "max_path_latency", 0))
+        if (2 * self.cfg.superstep + max_lat + self.cfg.ring_depth
+                >= ev.TIME_MOD // 2):
+            raise ValueError(
+                f"pipelined schedule: 2*superstep ({2 * self.cfg.superstep})"
+                f" + transport path latency {max_lat} + ring_depth "
+                f"{self.cfg.ring_depth} reaches the 8-bit wrap half-window "
+                f"({ev.TIME_MOD // 2}); an in-flight word could alias onto "
+                "a future deadline — lower the superstep or shorten the "
+                "topology's paths")
+
+    def _chip_pipeline_block(
+        self,
+        events: ev.EventBuffer,
+        table: rt.RoutingTable,
+        ring: dl.DelayRing,
+        flow: fc.RingState | None,
+        merge: mg.MergeBuffer | None,
+        sendq: fc.SendQueue | None,
+        pending: pc.PipelineCarry,
+    ) -> tuple[dl.DelayRing, pc.Delivered, pc.CommStats,
+               fc.RingState | None, mg.MergeBuffer | None,
+               fc.SendQueue | None, pc.PipelineCarry]:
+        """One pipelined stage for one chip: inject and *issue* block f,
+        drain block f−1 (the incoming carry).
+
+        Program order per stage — the scheduling contract pinned in
+        tests/test_pipeline.py:
+
+        1. inject block f into the live slab (compute only);
+        2. issue block f's exchange — every collective launches HERE,
+           before any drain op;
+        3. complete + drain block f−1 from ``pending`` (destination-side
+           elementwise work: latency shift, merge, deposit).
+
+        The issued-but-undrained block f becomes the outgoing carry.  Its
+        drain replays the per-step schedule one block late, so deposits
+        must clear the slots popped during the extra block
+        (``extra_ahead=B`` in :meth:`_drain_block`); delivery stays
+        bitwise-equal to the serial schedule whenever every admitted word
+        carries more slack than the two-block wait (min delay + path
+        latency > 2B−1), which the serial admission window plus the
+        pipeline wrap guard make the common case.  The returned
+        ``delivered`` / ``stats`` describe block f−1 — one block behind
+        the inputs, realigned by :meth:`run_pipelined`'s epilogue.
+        """
+        b = events.addr.shape[0]
+        t0 = ring.now
+        slab, inject, flow, sendq = self._inject_block(
+            events, table, flow, sendq, t0)
+        issued = pc.exchange_flush_issue(self.cfg, self.transport, slab)
+        ring, delivered, stats, merge = self._drain_block(
+            ring, merge,
+            pc.IssuedFlush(words=pending.words, link=pending.link),
+            pending.inject, pending.t0,
+            extra_ahead=b, valid=pending.valid)
+        pending = pc.PipelineCarry(
+            words=issued.words, link=issued.link, inject=inject,
+            t0=jnp.asarray(t0, jnp.int32),
+            valid=jnp.ones_like(pending.valid))
+        return ring, delivered, stats, flow, merge, sendq, pending
+
+    def _chip_flush_pending(
+        self,
+        ring: dl.DelayRing,
+        merge: mg.MergeBuffer | None,
+        pending: pc.PipelineCarry,
+    ) -> tuple[dl.DelayRing, pc.Delivered, pc.CommStats,
+               mg.MergeBuffer | None, pc.PipelineCarry]:
+        """Epilogue for one chip: drain the carried block with the *serial*
+        deposit guard (``extra_ahead=0`` — nothing popped its slots beyond
+        the in-block deferral, exactly as if the serial schedule had
+        drained it in place) and return a reset (empty) carry."""
+        ring, delivered, stats, merge = self._drain_block(
+            ring, merge,
+            pc.IssuedFlush(words=pending.words, link=pending.link),
+            pending.inject, pending.t0,
+            extra_ahead=0, valid=pending.valid)
+        empty = pc.PipelineCarry(
+            words=jnp.full_like(pending.words, ev.WORD_SENTINEL),
+            link=jax.tree.map(jnp.zeros_like, pending.link),
+            inject=jax.tree.map(jnp.zeros_like, pending.inject),
+            t0=jnp.zeros_like(pending.t0),
+            valid=jnp.zeros_like(pending.valid),
+        )
+        return ring, delivered, stats, merge, empty
+
+    def _chip_run_pipelined(
+        self,
+        events: ev.EventBuffer,
+        table: rt.RoutingTable,
+        ring: dl.DelayRing,
+        flow: fc.RingState | None,
+        merge: mg.MergeBuffer | None,
+        sendq: fc.SendQueue | None,
+    ):
+        """Scan :meth:`_chip_pipeline_block` over F blocks, then flush.
+
+        The scan's slot f drains block f−1 (slot 0 drains the empty
+        prologue), so the per-block outputs are realigned by dropping
+        slot 0 and appending the epilogue flush — the result is indexed
+        by block exactly like F serial supersteps.  The clock advances
+        internally (``ring.now + B`` per block); on return ``ring.now``
+        sits at ``t0 + F*B``."""
+        b = events.addr.shape[1]
+        pending = pc.pipeline_init(self.cfg, self._n_ports)
+
+        def body(carry, events_f):
+            ring, flow, merge, sendq, pending = carry
+            ring, delivered, stats, flow, merge, sendq, pending = (
+                self._chip_pipeline_block(
+                    events_f, table, ring, flow, merge, sendq, pending))
+            ring = dl.DelayRing(ring=ring.ring, now=ring.now + b)
+            return (ring, flow, merge, sendq, pending), (delivered, stats)
+
+        carry, scanned = jax.lax.scan(
+            body, (ring, flow, merge, sendq, pending), events)
+        ring, flow, merge, sendq, pending = carry
+        ring, f_del, f_stats, merge, pending = self._chip_flush_pending(
+            ring, merge, pending)
+        realign = lambda s, last: jax.tree.map(
+            lambda a, z: jnp.concatenate([a[1:], z[None]], axis=0), s, last)
+        delivered = realign(scanned[0], f_del)
+        stats = realign(scanned[1], f_stats)
+        return ring, delivered, stats, flow, merge, sendq, pending
+
+    def jit_pipeline_block(self) -> Callable:
+        """Cached jitted :meth:`pipeline_block` (positional args only)."""
+        return self._cached_jit("pipeline_block", self.pipeline_block)
+
+    def jit_run_pipelined(self) -> Callable:
+        """Cached jitted :meth:`run_pipelined` (positional args only)."""
+        return self._cached_jit("run_pipelined", self.run_pipelined)
+
+    def pipeline_block(
+        self,
+        events: ev.EventBuffer,
+        table: rt.RoutingTable,
+        ring: dl.DelayRing,
+        flow: fc.RingState | None = None,
+        merge: mg.MergeBuffer | None = None,
+        sendq: fc.SendQueue | None = None,
+        pending: pc.PipelineCarry | None = None,
+    ) -> FabricResult:
+        """One stage of the pipelined superstep schedule.
+
+        Same signature and clock contract as :meth:`superstep` (substep k
+        at ``ring.now + k``, caller advances ``ring.now`` by B) plus the
+        ``pending`` carry: the stage injects and *issues* this block's
+        exchange, and completes + drains the carried previous block.  The
+        returned ``delivered`` / ``stats`` therefore describe the
+        *previous* block (zeros / sentinels on the first call, whose carry
+        is the empty prologue); the new carry rides in
+        ``FabricResult.pending`` — thread it into the next call and
+        :meth:`flush_pending` it at the end of the run.  Use
+        :meth:`run_pipelined` when the whole block sequence is available
+        up front; this method exists for streaming drivers
+        (``snn.network`` feeds one block per outer-scan step) and for
+        checkpoint/recovery boundaries, where the carry must be visible.
+        """
+        b = events.addr.shape[0]
+        if b != self.cfg.superstep:
+            raise ValueError(
+                f"events carry {b} substeps, cfg.superstep is "
+                f"{self.cfg.superstep}")
+        self._check_pipeline_guard()
+        flow, merge, sendq = self._init_missing(flow, merge, sendq)
+        if pending is None:
+            pending = self.init_pending()
+        if self.batched:
+            out = jax.vmap(
+                self._chip_pipeline_block, axis_name=LOCAL_AXIS,
+                in_axes=(1, 0, 0, 0, 0, 0, 0),
+                out_axes=(0, 1, 1, 0, 0, 0, 0),
+            )(events, table, ring, flow, merge, sendq, pending)
+        else:
+            out = self._chip_pipeline_block(
+                events, table, ring, flow, merge, sendq, pending)
+        ring, delivered, stats, flow, merge, sendq, pending = out
+        return FabricResult(ring=ring, delivered=delivered, stats=stats,
+                            flow=flow, merge=merge, sendq=sendq,
+                            pending=pending)
+
+    def flush_pending(
+        self,
+        ring: dl.DelayRing,
+        pending: pc.PipelineCarry,
+        flow: fc.RingState | None = None,
+        merge: mg.MergeBuffer | None = None,
+        sendq: fc.SendQueue | None = None,
+    ) -> FabricResult:
+        """Epilogue: drain the in-flight carry (no inject, no collective).
+
+        Completes and drains the carried block against its own clock
+        (``pending.t0``) with the serial deposit guard, returning its
+        ``delivered`` / ``stats`` and an empty reset carry.  ``flow`` and
+        ``sendq`` pass through untouched (flushing moves no new events
+        through the credit gate)."""
+        if self.merge_enabled and merge is None:
+            merge = self.init_merge()
+        if self.batched:
+            ring, delivered, stats, merge, pending = jax.vmap(
+                self._chip_flush_pending, axis_name=LOCAL_AXIS,
+                in_axes=(0, 0, 0), out_axes=(0, 1, 1, 0, 0),
+            )(ring, merge, pending)
+        else:
+            ring, delivered, stats, merge, pending = (
+                self._chip_flush_pending(ring, merge, pending))
+        return FabricResult(ring=ring, delivered=delivered, stats=stats,
+                            flow=flow, merge=merge, sendq=sendq,
+                            pending=pending)
+
+    def run_pipelined(
+        self,
+        events: ev.EventBuffer,
+        table: rt.RoutingTable,
+        ring: dl.DelayRing,
+        flow: fc.RingState | None = None,
+        merge: mg.MergeBuffer | None = None,
+        sendq: fc.SendQueue | None = None,
+    ) -> FabricResult:
+        """Run F pipelined superstep blocks end to end: prologue, F−1
+        steady-state stages (block f's exchange issued before block f−1's
+        drain, concurrent with block f+1's inject under the XLA
+        scheduler), epilogue flush.
+
+        ``events`` carries leading [F, B] axes: local path
+        ``[F, B, n_chips, E]``, shard path ``[F, B, E]``.  The returned
+        ``delivered`` / ``stats`` are realigned to blocks — element f is
+        exactly block f, bitwise-equal to F serial :meth:`superstep`
+        calls whenever every admitted word has ``delay + path latency >
+        2B−1`` (tests/test_pipeline.py pins this for the repo's standard
+        workloads).  Unlike :meth:`superstep`, the clock advances
+        internally: on return ``ring.now == t0 + F*B`` and
+        ``FabricResult.pending`` is the empty reset carry.  For streaming
+        or recovery-aware drivers, use :meth:`pipeline_block` /
+        :meth:`flush_pending` directly.
+        """
+        if events.addr.ndim < 2 or events.addr.shape[1] != (
+                self.cfg.superstep):
+            raise ValueError(
+                f"events must carry [F, B={self.cfg.superstep}, ...] "
+                f"leading axes, got shape {events.addr.shape}")
+        self._check_pipeline_guard()
+        flow, merge, sendq = self._init_missing(flow, merge, sendq)
+        if self.batched:
+            out = jax.vmap(
+                self._chip_run_pipelined, axis_name=LOCAL_AXIS,
+                in_axes=(2, 0, 0, 0, 0, 0),
+                out_axes=(0, 2, 2, 0, 0, 0, 0),
+            )(events, table, ring, flow, merge, sendq)
+        else:
+            out = self._chip_run_pipelined(
+                events, table, ring, flow, merge, sendq)
+        ring, delivered, stats, flow, merge, sendq, pending = out
+        return FabricResult(ring=ring, delivered=delivered, stats=stats,
+                            flow=flow, merge=merge, sendq=sendq,
+                            pending=pending)

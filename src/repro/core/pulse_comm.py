@@ -303,6 +303,89 @@ class LinkStats(NamedTuple):
     backlog: jax.Array   # int32[n_ports]
 
 
+class IssuedFlush(NamedTuple):
+    """A superstep exchange that has been *issued* but not *completed*.
+
+    The issue half (:func:`exchange_flush_issue`) launches every collective
+    of the exchange — the fused ``all_to_all`` on a dense transport, the
+    whole hop-forwarded ``ppermute`` round-set on a routed one — and
+    returns the transport-layout delivery.  The complete half
+    (:func:`exchange_flush_complete`) does only destination-side work
+    (the routed path-latency timestamp shift and the per-substep
+    unpacking), so a pipelined schedule can put the *issue* of block f
+    before the *drain* of block f−1 in program order: the collective's
+    result is not consumed until the next pipeline stage, which is
+    exactly the loop-carried shape XLA's collective pipeliner overlaps
+    with the following block's inject compute.
+
+    words : int32[n_chips, buckets_per_chip, B, capacity] — delivered
+            slabs, leading axis = source chip; on a routed transport the
+            on-wire timestamps are still *unshifted* (the path-latency
+            shift is destination-side work and belongs to complete).
+    link  : per-port words/backlog of the issued exchange.
+    """
+
+    words: jax.Array
+    link: LinkStats
+
+
+def exchange_flush_issue(
+    cfg: PulseCommConfig, transport: tp.Transport, slab: jax.Array
+) -> IssuedFlush:
+    """Issue half of the superstep exchange: launch the collective(s).
+
+    ``slab`` is the filled ``int32[n_buckets, B, capacity]`` flush slab.
+    Every collective op of the exchange is traced here; the returned
+    :class:`IssuedFlush` carries the raw transport-layout delivery for a
+    later :func:`exchange_flush_complete`.
+    """
+    b = slab.shape[1]
+    shape = (cfg.n_chips, cfg.buckets_per_chip, b, cfg.bucket_capacity)
+    block = slab.reshape(shape)
+    if hasattr(transport, "exchange_words"):
+        if b > 1 and hasattr(transport, "with_flush_rounds"):
+            # The block carries B steps of payload and the link has B
+            # steps to drain it: judge backlog against B rounds of
+            # capacity (word counts are unaffected).
+            transport = transport.with_flush_rounds(b)
+        if hasattr(transport, "exchange_words_start"):
+            words, link_words, link_backlog = (
+                transport.exchange_words_start(block))
+        else:
+            words, link_words, link_backlog = transport.exchange_words(block)
+    else:
+        words = transport.all_to_all(block)
+        own = jnp.take(block, transport.chip_index(), axis=0)
+        off_chip = (jnp.sum(ev.word_valid(block).astype(jnp.int32))
+                    - jnp.sum(ev.word_valid(own).astype(jnp.int32)))
+        link_words = off_chip[None]
+        link_backlog = jnp.zeros((1,), jnp.int32)
+    return IssuedFlush(words=words,
+                       link=LinkStats(words=link_words,
+                                      backlog=link_backlog))
+
+
+def exchange_flush_complete(
+    cfg: PulseCommConfig, transport: tp.Transport, issued: IssuedFlush
+) -> tuple[jax.Array, LinkStats]:
+    """Complete half: destination-side finishing of an issued exchange.
+
+    Applies the routed transport's path-latency timestamp shift (a
+    no-collective elementwise op) and unpacks the transport layout into
+    per-substep lanes ``int32[B, lanes_in]``.  An in-flight block that
+    crosses a recovery boundary is completed by the *degraded* fabric, so
+    its words are re-timed under the recompiled plan — exactly what a
+    replayed in-flight word experiences on the detoured routes.
+    """
+    words = issued.words
+    if hasattr(transport, "exchange_words_finish"):
+        words = transport.exchange_words_finish(words)
+    b = words.shape[2]
+    # [n_chips(src), bpc, B, C] -> [B, n_chips * bpc * C] per substep
+    out = jnp.moveaxis(words, 2, 0).reshape(b, cfg.lanes_in)
+    return out, issued.link
+
+
 def exchange_flush(
     cfg: PulseCommConfig, transport: tp.Transport, slab: jax.Array
 ) -> tuple[jax.Array, LinkStats]:
@@ -317,27 +400,92 @@ def exchange_flush(
     ``int32[B, lanes_in]``, substep k carrying exactly what B separate
     exchanges would have delivered at that step (latency shifts included),
     which is what keeps the superstep schedule bitwise-equal to B=1.
+
+    This is the serial composition of the issue/complete pair — the
+    pipelined schedule (:meth:`repro.core.fabric.PulseFabric.
+    run_pipelined`) calls the halves separately so block f's issue can
+    precede block f−1's drain.
     """
-    b = slab.shape[1]
-    shape = (cfg.n_chips, cfg.buckets_per_chip, b, cfg.bucket_capacity)
-    block = slab.reshape(shape)
-    if hasattr(transport, "exchange_words"):
-        if b > 1 and hasattr(transport, "with_flush_rounds"):
-            # The block carries B steps of payload and the link has B
-            # steps to drain it: judge backlog against B rounds of
-            # capacity (word counts are unaffected).
-            transport = transport.with_flush_rounds(b)
-        words, link_words, link_backlog = transport.exchange_words(block)
-    else:
-        words = transport.all_to_all(block)
-        own = jnp.take(block, transport.chip_index(), axis=0)
-        off_chip = (jnp.sum(ev.word_valid(block).astype(jnp.int32))
-                    - jnp.sum(ev.word_valid(own).astype(jnp.int32)))
-        link_words = off_chip[None]
-        link_backlog = jnp.zeros((1,), jnp.int32)
-    # [n_chips(src), bpc, B, C] -> [B, n_chips * bpc * C] per substep
-    out = jnp.moveaxis(words, 2, 0).reshape(b, cfg.lanes_in)
-    return out, LinkStats(words=link_words, backlog=link_backlog)
+    issued = exchange_flush_issue(cfg, transport, slab)
+    return exchange_flush_complete(cfg, transport, issued)
+
+
+class InjectStats(NamedTuple):
+    """Per-substep source-side accounting of one injected block
+    (everything :class:`CommStats` needs that is known at inject time —
+    the drain-side legs join in at drain).  All fields carry a leading
+    [B] substep axis."""
+
+    sent: jax.Array          # int32[B]
+    overflow: jax.Array      # int32[B]
+    stalled: jax.Array       # int32[B]
+    wrap_expired: jax.Array  # int32[B]
+    lost: jax.Array          # int32[B]  culled by the health mask
+    wire_bytes: jax.Array    # int32[B]
+    utilization: jax.Array   # f32[B]
+    traffic: jax.Array       # int32[B, n_chips]
+
+
+class PipelineCarry(NamedTuple):
+    """The in-flight block of the pipelined superstep schedule — the
+    second (double-buffered) flush slab, post-exchange.
+
+    While the live :class:`FlushBuffer` packs block f, this carry holds
+    block f−1: already *issued* (its collective has run — ``words`` is
+    the raw transport-layout delivery of :class:`IssuedFlush`) but not
+    yet *drained* (no merge/deposit has seen it).  It threads through
+    the fabric exactly like the ``flow``/``merge``/``sendq`` carries and
+    is checkpoint-visible, so a recovery boundary can replay or account
+    it — :meth:`PipelineCarry.occupancy` is the ``in_flight`` leg of the
+    conservation identity::
+
+        Σ sent == deposited + expired + overflow + merge_dropped
+                  + stalled + lost_to_failure + queue occupancies
+                  + in_flight
+
+    words  : int32[n_chips, buckets_per_chip, B, capacity] issued
+             delivery (see :class:`IssuedFlush`; sentinel = empty lane).
+    link   : the issued exchange's per-port accounting.
+    inject : the block's per-substep source-side stats, reported when
+             the block is drained.
+    t0     : int32[] block-start clock of the in-flight block.
+    valid  : bool[] False = pipeline empty (prologue / after a flush).
+    """
+
+    words: jax.Array
+    link: LinkStats
+    inject: InjectStats
+    t0: jax.Array
+    valid: jax.Array
+
+    @property
+    def superstep(self) -> int:
+        return self.words.shape[-2]
+
+    def occupancy(self) -> jax.Array:
+        """Valid in-flight words (0 when the pipeline is empty)."""
+        n = jnp.sum(ev.word_valid(self.words).astype(jnp.int32),
+                    axis=(-4, -3, -2, -1))
+        return jnp.where(self.valid, n, 0)
+
+
+def pipeline_init(cfg: PulseCommConfig, n_ports: int = 1) -> PipelineCarry:
+    """An empty pipeline carry for one chip (``valid=False``; every
+    stats field zero so a drained empty carry contributes nothing)."""
+    b = cfg.superstep
+    z = jnp.zeros((b,), jnp.int32)
+    return PipelineCarry(
+        words=ev.sentinel_words(
+            (cfg.n_chips, cfg.buckets_per_chip, b, cfg.bucket_capacity)),
+        link=LinkStats(words=jnp.zeros((n_ports,), jnp.int32),
+                       backlog=jnp.zeros((n_ports,), jnp.int32)),
+        inject=InjectStats(
+            sent=z, overflow=z, stalled=z, wrap_expired=z, lost=z,
+            wire_bytes=z, utilization=jnp.zeros((b,), jnp.float32),
+            traffic=jnp.zeros((b, cfg.n_chips), jnp.int32)),
+        t0=jnp.asarray(0, jnp.int32),
+        valid=jnp.asarray(False, jnp.bool_),
+    )
 
 
 def exchange_with_stats(

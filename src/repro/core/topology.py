@@ -765,7 +765,28 @@ class RoutedTransport:
         ``ppermute`` round's launch cost ONCE per block: the per-hop relay
         buffers simply carry B steps of payload, so the collective launch
         rate on every link drops to 1/B per simulated step.
+
+        This is the serial composition of :meth:`exchange_words_start`
+        (the hop rounds — every collective) and
+        :meth:`exchange_words_finish` (the destination-side latency
+        shift); a pipelined caller splits the halves so the round-set can
+        interleave with the next block's inject compute.
         """
+        y, link_words, link_backlog = self.exchange_words_start(x)
+        return self.exchange_words_finish(y), link_words, link_backlog
+
+    def exchange_words_start(
+        self, x: jax.Array
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Issue half of the routed exchange: run the full hop-forwarding
+        round-set (every ``ppermute`` / grouped crossbar of the route
+        plan) and account per-port link words/backlog.  The returned slab
+        is in delivered layout but its on-wire timestamps are *unshifted*
+        — pass it through :meth:`exchange_words_finish` before decoding
+        deadlines.  Splitting here lets a software-pipelined schedule
+        trace the collectives of block f before the (independent) drain
+        ops of block f−1, so the rounds can run while the next block's
+        inject compute proceeds."""
         topo = self.topology
         n = topo.n_chips
         if x.shape[0] != n:
@@ -799,11 +820,24 @@ class RoutedTransport:
         else:
             y = self._tree_exchange(x, me, words, backlog)
 
-        if self.apply_latency and int(self.plan.latency.max()):
-            dt = jnp.take(jnp.asarray(self.plan.latency, jnp.int32), me,
-                          axis=1)                        # [n] by source
-            y = _shift_word_time(y, dt.reshape((n,) + (1,) * (y.ndim - 1)))
         return y, jnp.stack(words), jnp.stack(backlog)
+
+    def exchange_words_finish(self, y: jax.Array) -> jax.Array:
+        """Complete half of the routed exchange: apply the compiled
+        path-latency shift to the delivered slab (pure destination-side
+        elementwise work — no collective).  Uses *this* transport's plan:
+        an in-flight slab completed after a recovery boundary is re-timed
+        under the recompiled (degraded) routes.  Latencies are clamped at
+        zero so pairs the degraded plan marks unreachable (negative
+        sentinel) pass through untouched — their words are culled by the
+        fabric's accounting, never re-timed into ghosts."""
+        n = self.topology.n_chips
+        if self.apply_latency and int(self.plan.latency.max()):
+            me = self.chip_index() // self.block_size
+            lat = jnp.maximum(jnp.asarray(self.plan.latency, jnp.int32), 0)
+            dt = jnp.take(lat, me, axis=1)               # [n] by source
+            y = _shift_word_time(y, dt.reshape((n,) + (1,) * (y.ndim - 1)))
+        return y
 
     def with_flush_rounds(self, rounds: int) -> "RoutedTransport":
         """The same transport judging backlog at block granularity: one

@@ -58,6 +58,13 @@ class NetworkConfig:
     record_voltage: bool = True
     flow: fb.FlowControlConfig | None = None   # optional credit back-pressure
     topology: tpo.Topology | None = None       # switched network (None=dense)
+    # Pipelined superstep schedule: issue block f's exchange before
+    # draining block f−1, overlapping the collective with the next
+    # block's neuron compute (the in-flight block rides in
+    # NetworkState.pending).  Delivery stays bitwise-equal to the serial
+    # schedule when every axonal delay + path latency exceeds 2B−1
+    # (tests/test_pipeline.py); records keep their [T, ...] shape.
+    pipeline: bool = False
     # Resilience: run on a degraded fabric — routes recompiled around the
     # failures, unreachable traffic culled into CommStats.lost_to_failure
     # (see repro.core.resilience; dead_links needs a topology).
@@ -69,6 +76,10 @@ class NetworkConfig:
             raise ValueError(self.neuron_model)
         if self.comm_mode not in ("event", "dense"):
             raise ValueError(self.comm_mode)
+        if self.pipeline and self.comm_mode != "event":
+            raise ValueError(
+                "pipeline=True overlaps the event-path exchange; the dense "
+                "comm_mode has no collective to pipeline")
         if self.topology is not None and \
                 self.topology.n_chips != self.comm.n_chips:
             raise ValueError(
@@ -89,6 +100,7 @@ class NetworkState(NamedTuple):
     flow: Any = None             # credit state when cfg.flow is configured
     merge: Any = None            # merge queue (full mode, merge_rate > 0)
     sendq: Any = None            # retransmit queue (flow.retransmit_depth>0)
+    pending: Any = None          # in-flight pipeline carry (cfg.pipeline)
 
 
 class StepRecord(NamedTuple):
@@ -161,9 +173,10 @@ def init_state(cfg: NetworkConfig, params: NetworkParams) -> NetworkState:
         lambda _: dl.init(c.ring_depth, c.n_inputs_per_chip, dtype=ring_dtype)
     )(jnp.arange(c.n_chips))
     fabric = local_fabric(cfg)
+    pending = fabric.init_pending() if cfg.pipeline else None
     return NetworkState(neuron=nstate, ring=ring, t=jnp.asarray(0, jnp.int32),
                         flow=fabric.init_flow(), merge=fabric.init_merge(),
-                        sendq=fabric.init_sendq())
+                        sendq=fabric.init_sendq(), pending=pending)
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +306,17 @@ def _superstep_active(cfg: NetworkConfig) -> bool:
     return cfg.comm.superstep > 1 and cfg.comm_mode == "event"
 
 
+def _pipeline_active(cfg: NetworkConfig) -> bool:
+    """True when blocks run the pipelined (double-buffered) schedule."""
+    return cfg.pipeline and cfg.comm_mode == "event"
+
+
+def _blocked(cfg: NetworkConfig) -> bool:
+    """True when run()/run_plastic scan whole B-step blocks (the pipelined
+    schedule blocks even at B=1 — its carry spans block boundaries)."""
+    return _superstep_active(cfg) or _pipeline_active(cfg)
+
+
 def _block_impl(
     cfg: NetworkConfig,
     fabric: fb.PulseFabric,
@@ -318,6 +342,15 @@ def _block_impl(
     deferral), so the phase-1 pops can never depend on phase-2 deposits —
     delivered spike trains stay bitwise-equal to the per-step schedule
     (tests/test_superstep.py).
+
+    With ``cfg.pipeline`` phase 2 calls :meth:`PulseFabric.pipeline_block`
+    instead: this block's exchange is *issued* (collective launched) and
+    the *previous* block — carried in ``state.pending`` — is completed and
+    drained, so the collective's result is only consumed one block later
+    and the XLA scheduler can overlap it with the next block's phase-1
+    compute.  The returned record's ``stats`` then describe the previous
+    block (``spikes`` / ``voltage`` are still this block's);
+    :func:`run` realigns them with the epilogue flush.
 
     Returns (new_state, record with leading [B] axis, new_w, new_stdp).
     """
@@ -356,14 +389,19 @@ def _block_impl(
     # Missing carries are auto-initialized by superstep itself and come
     # back in the result (run()'s _ensure_carries keeps the scan carry
     # structure fixed across iterations).
-    res = fabric.superstep(
-        ebs, table, dl.DelayRing(ring=ring.ring, now=ring.now - B),
-        state.flow, state.merge, state.sendq)
+    ring0 = dl.DelayRing(ring=ring.ring, now=ring.now - B)
+    if _pipeline_active(cfg):
+        res = fabric.pipeline_block(
+            ebs, table, ring0, state.flow, state.merge, state.sendq,
+            state.pending)
+    else:
+        res = fabric.superstep(
+            ebs, table, ring0, state.flow, state.merge, state.sendq)
     ring = dl.DelayRing(ring=res.ring.ring, now=res.ring.now + B)
 
     new_state = NetworkState(neuron=nstate, ring=ring, t=state.t + B,
                              flow=res.flow, merge=res.merge,
-                             sendq=res.sendq)
+                             sendq=res.sendq, pending=res.pending)
     rec = StepRecord(spikes=spikes, voltage=voltage, stats=res.stats)
     return new_state, rec, new_w, new_stdp
 
@@ -378,11 +416,12 @@ def step(
     state: NetworkState,
     ext_input: jax.Array,         # [n_chips, n_inputs] spike counts / rates
 ) -> tuple[NetworkState, StepRecord]:
-    if _superstep_active(cfg):
+    if _blocked(cfg):
         raise ValueError(
-            f"comm.superstep={cfg.comm.superstep} batches the exchange "
-            "over B-step blocks — drive the network with run() (scans "
-            "whole blocks) instead of single step() calls")
+            f"comm.superstep={cfg.comm.superstep}, pipeline="
+            f"{cfg.pipeline}: the exchange schedule is defined over "
+            "B-step blocks — drive the network with run() (scans whole "
+            "blocks) instead of single step() calls")
     new_state, rec, _, _ = _step_impl(
         cfg, local_fabric(cfg), params.table, params.neuron,
         params.crossbar.w, state, ext_input,
@@ -390,7 +429,8 @@ def step(
     return new_state, rec
 
 
-def _ensure_carries(fabric: fb.PulseFabric, state: NetworkState) -> NetworkState:
+def _ensure_carries(fabric: fb.PulseFabric, state: NetworkState,
+                    pipeline: bool = False) -> NetworkState:
     """Materialize flow/merge carries before a scan (the carry pytree
     structure must be fixed across iterations)."""
     if fabric.flow is not None and state.flow is None:
@@ -399,7 +439,28 @@ def _ensure_carries(fabric: fb.PulseFabric, state: NetworkState) -> NetworkState
         state = state._replace(merge=fabric.init_merge())
     if fabric.sendq_enabled and state.sendq is None:
         state = state._replace(sendq=fabric.init_sendq())
+    if pipeline and state.pending is None:
+        state = state._replace(pending=fabric.init_pending())
     return state
+
+
+def _flush_and_realign(
+    fabric: fb.PulseFabric, final: NetworkState, recs: StepRecord
+) -> tuple[NetworkState, StepRecord]:
+    """Pipelined epilogue: drain the in-flight carry, then realign the
+    per-block stats — the scan's slot f carried block f−1's stats (slot 0
+    the empty prologue), so drop slot 0 and append the flush.  ``spikes``
+    / ``voltage`` were never lagged (phase 1 runs in place) and stay
+    untouched."""
+    res = fabric.flush_pending(final.ring, final.pending, final.flow,
+                               final.merge, final.sendq)
+    stats = jax.tree.map(
+        lambda a, z: jnp.concatenate([a[1:], z[None]], axis=0),
+        recs.stats, res.stats)
+    recs = recs._replace(stats=stats)
+    final = final._replace(ring=res.ring, merge=res.merge,
+                           pending=res.pending)
+    return final, recs
 
 
 def _blocked_inputs(cfg: NetworkConfig, ext_inputs: jax.Array) -> jax.Array:
@@ -427,11 +488,17 @@ def run(
     per-step [T, ...] shape either way, and the delivered spike trains are
     bitwise-equal to the B=1 schedule whenever axonal delays exceed
     ``B + path_latency`` (tests/test_superstep.py).
+
+    With ``cfg.pipeline`` the blocks run the double-buffered schedule
+    (each block's exchange issued before the previous block's drain, the
+    in-flight block carried in ``state.pending``) and the run ends with
+    an epilogue flush; stats are realigned so record element t still
+    describes step t exactly.
     """
     fabric = local_fabric(cfg)
-    state = _ensure_carries(fabric, state)
+    state = _ensure_carries(fabric, state, pipeline=_pipeline_active(cfg))
 
-    if _superstep_active(cfg):
+    if _blocked(cfg):
         blocks = _blocked_inputs(cfg, ext_inputs)
 
         def block_body(carry, ext_block):
@@ -442,6 +509,8 @@ def run(
             return new_state, rec
 
         final, recs = jax.lax.scan(block_body, state, blocks)
+        if _pipeline_active(cfg):
+            final, recs = _flush_and_realign(fabric, final, recs)
         rec = jax.tree.map(
             lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
             recs)
@@ -475,9 +544,9 @@ def run_plastic(
                                               c.neurons_per_chip))(
         jnp.arange(c.n_chips))
     fabric = local_fabric(cfg)
-    state = _ensure_carries(fabric, state)
+    state = _ensure_carries(fabric, state, pipeline=_pipeline_active(cfg))
 
-    if _superstep_active(cfg):
+    if _blocked(cfg):
         blocks = _blocked_inputs(cfg, ext_inputs)
 
         def block_body(carry, ext_block):
@@ -490,6 +559,9 @@ def run_plastic(
 
         (final_state, w_final, s_final), recs = jax.lax.scan(
             block_body, (state, params.crossbar.w, sstate), blocks)
+        if _pipeline_active(cfg):
+            final_state, recs = _flush_and_realign(fabric, final_state,
+                                                   recs)
         rec = jax.tree.map(
             lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
             recs)
@@ -563,3 +635,49 @@ def shard_superstep(
         params.crossbar.w, state, ext_block,
     )
     return new_state, rec
+
+
+def shard_pipeline_block(
+    cfg: NetworkConfig,
+    axis: str | tuple[str, ...],
+    params: NetworkParams,        # shard-local: no chip axis
+    state: NetworkState,
+    ext_block: jax.Array,         # [B, n_inputs]
+) -> tuple[NetworkState, StepRecord]:
+    """Per-shard pipelined stage — call inside shard_map over ``axis``.
+
+    The pipelined counterpart of :func:`shard_superstep` (requires
+    ``cfg.pipeline``): issues this block's exchange, drains the previous
+    block from ``state.pending``.  The returned record's ``stats``
+    describe the previous block; finish the stream with
+    :func:`shard_flush_pending` and realign as :func:`run` does.
+    ``state.pending`` must be materialized (shard-local, e.g.
+    ``shard_fabric(cfg, axis).init_pending()``) before the first call
+    when driving this inside a scan.
+    """
+    if not _pipeline_active(cfg):
+        raise ValueError("shard_pipeline_block needs cfg.pipeline=True "
+                         "(event comm_mode)")
+    fabric = shard_fabric(cfg, axis)
+    state = _ensure_carries(fabric, state, pipeline=True)
+    new_state, rec, _, _ = _block_impl(
+        cfg, fabric, params.table, params.neuron,
+        params.crossbar.w, state, ext_block,
+    )
+    return new_state, rec
+
+
+def shard_flush_pending(
+    cfg: NetworkConfig,
+    axis: str | tuple[str, ...],
+    state: NetworkState,
+) -> tuple[NetworkState, pc.CommStats]:
+    """Per-shard pipelined epilogue: drain the in-flight carry.  Returns
+    the updated state (empty carry) and the flushed block's stats
+    (leading [B] substep axis)."""
+    fabric = shard_fabric(cfg, axis)
+    res = fabric.flush_pending(state.ring, state.pending, state.flow,
+                               state.merge, state.sendq)
+    new_state = state._replace(ring=res.ring, merge=res.merge,
+                               pending=res.pending)
+    return new_state, res.stats

@@ -190,8 +190,9 @@ _HLO_SCRIPT = textwrap.dedent("""
             sq = lambda z: jax.tree.map(lambda a: a[0], z)
             opt = lambda z: None if z is None else sq(z)
             eb = jax.tree.map(lambda a: a[:, 0], e)
-            ring, delv, stats, flow, merge, sendq = shard.superstep(
-                eb, sq(t), sq(r), None, opt(m))
+            res = shard.superstep(eb, sq(t), sq(r), None, opt(m))
+            ring, delv, stats, merge = (
+                res.ring, res.delivered, res.stats, res.merge)
             ring = jax.tree.map(lambda a: a[None], ring)
             delv = jax.tree.map(lambda a: a[:, None], delv)
             stats = jax.tree.map(lambda a: a[:, None], stats)
