@@ -250,6 +250,96 @@ def superstep_sweep(supersteps=(1, 2, 4, 8), n_chips=8, n_neurons=256,
     return rows
 
 
+def _block_fixture(b, *, n_chips=8, n_neurons=256, rate=0.2,
+                   bucket_capacity=16, seed=6, use_pallas=False):
+    """One B-step superstep load on the local transport — the shared
+    fixture of the phase-timing and fused-megakernel sweeps, matching
+    :func:`superstep_sweep`'s workload so the rows are comparable."""
+    key = jax.random.PRNGKey(seed)
+    table = rt.random_table(key, n_neurons, n_chips, max_delay=14,
+                            min_delay=10)
+    tables = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_chips,) + x.shape), table)
+    cfg = pc.PulseCommConfig(
+        n_chips=n_chips, neurons_per_chip=n_neurons,
+        n_inputs_per_chip=n_neurons, event_capacity=n_neurons,
+        bucket_capacity=bucket_capacity, ring_depth=16, superstep=b,
+        use_pallas=use_pallas)
+    fab = PulseFabric(cfg, transport="local")
+    rings = jax.vmap(lambda _: dl.init(cfg.ring_depth, n_neurons))(
+        jnp.arange(n_chips))
+    ks = jax.random.split(key, b)
+    spikes = jnp.stack([jax.random.uniform(k, (n_chips, n_neurons))
+                        < rate for k in ks])
+    ebs = jax.vmap(jax.vmap(
+        lambda s: ev.from_spikes(s, 0, n_neurons)[0]))(spikes)
+    return cfg, fab, tables, rings, ebs
+
+
+def phase_timing_sweep(supersteps=(1, 8), reps=12, use_pallas=False, **kw):
+    """Isolated wall time of each superstep phase: inject / exchange /
+    drain jitted and timed separately, vmapped over the chip axis exactly
+    as :meth:`PulseFabric.superstep` dispatches them.
+
+    The phase split makes the megakernel target legible in the bench
+    trajectory: inject dominates and scales with B, the exchange is the
+    amortized collective, and drain is flat per step.  The drain phase
+    includes the (collective-free) completion unpack, as in the fabric.
+    """
+    rows = []
+    for b in supersteps:
+        cfg, fab, tables, rings, ebs = _block_fixture(
+            b, use_pallas=use_pallas, **kw)
+        inject = jax.jit(jax.vmap(
+            lambda e, t, r: fab._inject_block(e, t, None, None, r.now)[:2],
+            in_axes=(1, 0, 0)))
+        slabs, inj_stats = inject(ebs, tables, rings)
+        exchange = jax.jit(jax.vmap(
+            lambda slab: pc.exchange_flush_issue(cfg, fab.transport, slab),
+            axis_name=fb.LOCAL_AXIS))
+        issued = exchange(slabs)
+        drain = jax.jit(jax.vmap(
+            lambda r, i, s: fab._drain_block(r, None, i, s, r.now)[:3],
+            axis_name=fb.LOCAL_AXIS))
+        for phase, fn, args in (
+                ("inject", inject, (ebs, tables, rings)),
+                ("exchange", exchange, (slabs,)),
+                ("drain", drain, (rings, issued, inj_stats))):
+            us_block = time_loop(fn, *args, reps=reps)
+            rows.append({"superstep": b, "phase": phase,
+                         "us_per_block": us_block,
+                         "us_per_step": us_block / b})
+    return rows
+
+
+def fused_superstep_sweep(supersteps=(1, 8), reps=12, **kw):
+    """The fused megakernel block (use_pallas=True) against the unfused
+    op chain on the identical workload.
+
+    On a TPU backend this is the tentpole perf row (single pallas_call
+    per phase, state VMEM-resident across all B substeps).  On CPU the
+    kernels run in Pallas *interpret* mode — an emulation that is
+    expected to be slower than the fused XLA graph of the unfused chain;
+    the ``backend`` tag in the derived field marks which regime produced
+    the number so the compare gate's trajectory is interpretable.
+    """
+    rows = []
+    for b in supersteps:
+        cfg, fab, tables, rings, ebs = _block_fixture(
+            b, use_pallas=True, **kw)
+        us_block = time_loop(fab.jit_superstep(), ebs, tables, rings,
+                             reps=reps)
+        _, fab0, _, _, _ = _block_fixture(b, use_pallas=False, **kw)
+        us0 = time_loop(fab0.jit_superstep(), ebs, tables, rings,
+                        reps=reps)
+        rows.append({"superstep": b, "us_per_block": us_block,
+                     "us_per_step": us_block / b,
+                     "unfused_us_per_block": us0,
+                     "speedup": us0 / us_block,
+                     "backend": jax.default_backend()})
+    return rows
+
+
 def merge_congestion(capacities=(4, 8, 16, 32), rate_limit=16, seed=1):
     """Bigger packets arrive in bursts: a rate-limited merge buffer sees
     higher peak occupancy (the congestion cost of aggressive aggregation)."""
@@ -490,6 +580,18 @@ def main(csv=True, smoke=False):
             f"ev_step={r['events_per_step']};"
             "note=B-sweep-monotone-after-remeasure:"
             "seed-B4-outlier-was-host-timing-bimodality"))
+    for r in phase_timing_sweep(supersteps=(1, 8), reps=4 if smoke else 12):
+        out.append((
+            "phase_%s_B%d" % (r["phase"], r["superstep"]),
+            r["us_per_step"], 0,
+            f"us_block={r['us_per_block']:.1f}"))
+    for r in fused_superstep_sweep(supersteps=(1, 8),
+                                   reps=4 if smoke else 12):
+        out.append((
+            "fused_superstep_B%d" % r["superstep"], r["us_per_step"], 0,
+            f"us_block={r['us_per_block']:.1f};"
+            f"unfused_us_block={r['unfused_us_per_block']:.1f};"
+            f"speedup={r['speedup']:.2f};backend={r['backend']}"))
     for r in merge_congestion(capacities=(8,) if smoke else (4, 8, 16, 32)):
         out.append(("merge_congestion_cap_%d" % r["capacity"],
                     r["us_per_step"], 0,

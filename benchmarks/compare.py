@@ -53,6 +53,8 @@ GATED_PREFIXES = (
     "aggregation_capacity_",
     "topology_",
     "superstep_B",
+    "phase_",
+    "fused_superstep_B",
     "pipeline_",
     "resilience_",
     "pod_",

@@ -71,6 +71,32 @@ def deposit(
     return DelayRing(ring=ring, now=state.now), expired
 
 
+def deposit_judgment(
+    words: jax.Array,
+    *,
+    now: jax.Array,
+    min_ahead: jax.Array | int,
+    depth: int,
+    n_inputs: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """The word-deliverability judgment of :func:`deposit_words`, factored
+    out so the fused drain megakernel (repro.kernels.fused_drain) and its
+    reference share one definition with the unfused path.
+
+    Returns ``(deliverable, slot, col, expired)``: the admission mask, the
+    ring slot and input column of each deliverable word (0 on
+    non-deliverable lanes), and the expired count.
+    """
+    valid = ev.word_valid(words)
+    ahead = ev.wrap8_diff(words & ev.WORD_TIME_MASK, ev.wrap8(now))
+    deliverable = valid & (ahead > min_ahead) & (ahead <= depth)
+    expired = jnp.sum(valid & ~deliverable).astype(jnp.int32)
+    slot = jnp.where(deliverable, (now + ahead) % depth, 0)
+    addr = ev.word_addr(words)
+    col = jnp.where(deliverable, jnp.clip(addr, 0, n_inputs - 1), 0)
+    return deliverable, slot, col, expired
+
+
 def deposit_words(
     state: DelayRing,
     words: jax.Array,
@@ -98,16 +124,11 @@ def deposit_words(
     merge-congested stragglers can hit this — fresh words are admitted
     with more slack than the deferral).
     """
-    d = state.depth
     if now is None:
         now = state.now
-    valid = ev.word_valid(words)
-    ahead = ev.wrap8_diff(words & ev.WORD_TIME_MASK, ev.wrap8(now))
-    deliverable = valid & (ahead > min_ahead) & (ahead <= d)
-    expired = jnp.sum(valid & ~deliverable).astype(jnp.int32)
-    slot = jnp.where(deliverable, (now + ahead) % d, 0)
-    addr = ev.word_addr(words)
-    col = jnp.where(deliverable, jnp.clip(addr, 0, state.n_inputs - 1), 0)
+    deliverable, slot, col, expired = deposit_judgment(
+        words, now=now, min_ahead=min_ahead, depth=state.depth,
+        n_inputs=state.n_inputs)
     ring = state.ring.at[slot, col].add(deliverable.astype(jnp.int32), mode="drop")
     return DelayRing(ring=ring, now=state.now), expired
 

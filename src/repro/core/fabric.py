@@ -556,6 +556,16 @@ class PulseFabric:
             reach_row = jnp.take(jnp.asarray(self._deliverable),
                                  self.transport.chip_index(), axis=0)
 
+        if cfg.use_pallas and self.flow is None and table.fanout == 1:
+            # Megakernel fast path: the whole B-substep inject chain in a
+            # single pallas_call (repro.kernels.fused_inject), bitwise
+            # equal to the loop below (tests/test_fused.py).  The credit
+            # gate stays host-side (its feedback is sequential across
+            # substeps), so flow-controlled fabrics take the unfused loop.
+            slab, inject = self._inject_block_fused(events, table,
+                                                    reach_row, t0)
+            return slab, inject, flow, sendq
+
         for k in range(b):
             now_k = t0 + k
             defer_k = (b - 1) - k
@@ -632,6 +642,43 @@ class PulseFabric:
             utilization=stack("utilization"), traffic=stack("traffic"))
         return flushbuf.slab, inject, flow, sendq
 
+    def _inject_block_fused(
+        self,
+        events: ev.EventBuffer,
+        table: rt.RoutingTable,
+        reach_row: jax.Array | None,
+        t0: jax.Array,
+    ) -> tuple[jax.Array, pc.InjectStats]:
+        """Single-launch inject path: route + reach cull + wrap window +
+        flush-pack for all B substeps inside one kernel, the slab and all
+        counters VMEM-resident across the block.  The wire-byte and
+        utilization figures derive from the per-substep bucket counts with
+        the same formulas as the unfused loop, so every InjectStats field
+        is bitwise-identical.
+        """
+        from repro.kernels.fused_inject import ops as fi_ops
+
+        cfg = self.cfg
+        out = fi_ops.fused_inject(
+            events, table, reach_row, t0,
+            n_chips=cfg.n_chips, buckets_per_chip=cfg.buckets_per_chip,
+            capacity=cfg.bucket_capacity, mode=cfg.mode,
+            time_window=cfg.time_window)
+        fill = jnp.minimum(out.counts, cfg.bucket_capacity)
+        n_packets = jnp.sum((out.counts > 0).astype(jnp.int32), axis=1)
+        wire = (n_packets * pc.HEADER_BYTES
+                + jnp.sum(fill, axis=1) * pc.EVENT_BYTES)
+        b = events.addr.shape[0]
+        inject = pc.InjectStats(
+            sent=out.sent, overflow=out.overflow,
+            stalled=jnp.zeros((b,), jnp.int32),
+            wrap_expired=out.wrap_expired, lost=out.lost,
+            wire_bytes=wire.astype(jnp.int32),
+            utilization=(fill.astype(jnp.float32).mean(axis=1)
+                         / float(cfg.bucket_capacity)),
+            traffic=out.traffic)
+        return out.slab, inject
+
     def _drain_block(
         self,
         ring: dl.DelayRing,
@@ -686,6 +733,79 @@ class PulseFabric:
             delivered_words = jnp.where(
                 alive_self, delivered_words, jnp.int32(ev.WORD_SENTINEL))
 
+        if cfg.use_pallas:
+            # Megakernel fast path: merge + deposit for all B substeps in
+            # a single pallas_call (repro.kernels.fused_drain) — the ring
+            # and merge queue stay VMEM-resident across the block and the
+            # gate (pipeline ``valid``) is applied in-kernel, replacing
+            # the queue-revert below.  Bitwise equal to the unfused chain
+            # (tests/test_fused.py).
+            from repro.kernels.fused_drain import ops as fd_ops
+
+            dmode = ("rate" if cfg.mode == "full" and self.merge_enabled
+                     else "sort" if cfg.mode == "full" else "passthrough")
+            fused = fd_ops.fused_drain(
+                ring, delivered_words,
+                merge.words if dmode == "rate" else None, t0,
+                mode=dmode, rate=cfg.merge_rate, extra_ahead=extra_ahead,
+                gate=valid)
+            ring = fused.ring
+            if dmode == "rate":
+                merge = mg.MergeBuffer(words=fused.queue)
+            out_words = fused.words
+            dep_expired = fused.dep_expired
+            merge_dropped = fused.dropped
+        else:
+            ring, out_words, dep_expired, merge_dropped, merge = (
+                self._drain_block_unfused(ring, merge, delivered_words,
+                                          t0, extra_ahead, valid))
+
+        stats_steps = []
+        for k in range(b):
+            last = k == b - 1
+            stats_steps.append(pc.CommStats(
+                sent=inject.sent[k],
+                overflow=inject.overflow[k],
+                merge_dropped=jnp.asarray(merge_dropped[k], jnp.int32),
+                expired=inject.wrap_expired[k] + dep_expired[k],
+                stalled=inject.stalled[k],
+                utilization=inject.utilization[k],
+                wire_bytes=inject.wire_bytes[k],
+                traffic=inject.traffic[k],
+                # The collective fires once per block: its link occupancy
+                # is attributed to the flush substep (zeros elsewhere).
+                # Per-block link_words totals match the per-step schedule
+                # exactly; link_backlog is judged at block granularity (B
+                # rounds of capacity — deferral smooths per-step bursts,
+                # so it is <= the per-step schedule's total).
+                link_words=link.words if last else jnp.zeros_like(
+                    link.words),
+                link_backlog=link.backlog if last else jnp.zeros_like(
+                    link.backlog),
+                lost_to_failure=inject.lost[k] + lost_drain[k],
+            ))
+
+        delivered = pc.Delivered(words=out_words)
+        stats = jax.tree.map(lambda *xs: jnp.stack(xs), *stats_steps)
+        return ring, delivered, stats, merge
+
+    def _drain_block_unfused(
+        self,
+        ring: dl.DelayRing,
+        merge: mg.MergeBuffer | None,
+        delivered_words: jax.Array,
+        t0: jax.Array,
+        extra_ahead: int,
+        valid: jax.Array | None,
+    ) -> tuple[dl.DelayRing, jax.Array, jax.Array, jax.Array,
+               mg.MergeBuffer | None]:
+        """The composed merge + per-substep deposit chain — the bitwise
+        reference the fused drain kernel is pinned against.  Returns
+        ``(ring, out_words[B, lanes], dep_expired[B], merge_dropped[B],
+        merge)``.
+        """
+        cfg = self.cfg
+        b = delivered_words.shape[0]
         merge_out = None
         merge_dropped = jnp.zeros((b,), jnp.int32)
         if cfg.mode == "full" and self.merge_enabled:
@@ -712,7 +832,7 @@ class PulseFabric:
             else:
                 merge = new_merge
 
-        out_words, stats_steps = [], []
+        out_words, dep_expired = [], []
         for k in range(b):
             now_k = t0 + k
             defer_k = (b - 1) - k
@@ -722,35 +842,12 @@ class PulseFabric:
                 words_k = mg.merge_words(delivered_words[k], now_k)
             else:
                 words_k = delivered_words[k]
-            ring, dep_expired = dl.deposit_words(
+            ring, expired_k = dl.deposit_words(
                 ring, words_k, now=now_k, min_ahead=extra_ahead + defer_k)
             out_words.append(words_k)
-            last = k == b - 1
-            stats_steps.append(pc.CommStats(
-                sent=inject.sent[k],
-                overflow=inject.overflow[k],
-                merge_dropped=jnp.asarray(merge_dropped[k], jnp.int32),
-                expired=inject.wrap_expired[k] + dep_expired,
-                stalled=inject.stalled[k],
-                utilization=inject.utilization[k],
-                wire_bytes=inject.wire_bytes[k],
-                traffic=inject.traffic[k],
-                # The collective fires once per block: its link occupancy
-                # is attributed to the flush substep (zeros elsewhere).
-                # Per-block link_words totals match the per-step schedule
-                # exactly; link_backlog is judged at block granularity (B
-                # rounds of capacity — deferral smooths per-step bursts,
-                # so it is <= the per-step schedule's total).
-                link_words=link.words if last else jnp.zeros_like(
-                    link.words),
-                link_backlog=link.backlog if last else jnp.zeros_like(
-                    link.backlog),
-                lost_to_failure=inject.lost[k] + lost_drain[k],
-            ))
-
-        delivered = pc.Delivered(words=jnp.stack(out_words))
-        stats = jax.tree.map(lambda *xs: jnp.stack(xs), *stats_steps)
-        return ring, delivered, stats, merge
+            dep_expired.append(expired_k)
+        return (ring, jnp.stack(out_words), jnp.stack(dep_expired),
+                merge_dropped, merge)
 
     def _chip_step(
         self,

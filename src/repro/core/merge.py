@@ -153,19 +153,31 @@ def merge_step_words(
     pad = jnp.full((rate,), ev.WORD_SENTINEL, jnp.int32)
     all_words = jnp.concatenate([buf.words, in_words.reshape(-1), pad])
     all_words = _sorted_words(all_words, now, use_pallas)
+    new_words, out_words, dropped = merge_split(
+        all_words, rate=rate, depth=buf.depth)
+    return MergeBuffer(words=new_words), out_words, dropped
 
-    # Valid lanes are compacted to the front, so the first `rate` lanes are
-    # the earliest-deadline events and everything the queue keeps is the
-    # window [rate, rate + depth).
-    out_words = all_words[:rate]
 
-    n_valid = jnp.sum(ev.word_valid(all_words).astype(jnp.int32))
+def merge_split(
+    all_words_sorted: jax.Array, *, rate: int, depth: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Split one sorted merge cycle into (queue[depth], emitted[rate],
+    dropped) — the emission/overflow judgment of :func:`merge_step_words`,
+    factored out so the fused drain megakernel (repro.kernels.fused_drain)
+    shares one definition with the unfused path.
+
+    Valid lanes are compacted to the front of the sorted stream, so the
+    first ``rate`` lanes are the earliest-deadline events and everything
+    the queue keeps is the window [rate, rate + depth); only occupancy
+    beyond the queue depth drops (congestion overflow).
+    """
+    out_words = all_words_sorted[:rate]
+    n_valid = jnp.sum(ev.word_valid(all_words_sorted).astype(jnp.int32))
     emitted = jnp.minimum(n_valid, rate)
     queued = n_valid - emitted
-    dropped = jnp.maximum(queued - buf.depth, 0).astype(jnp.int32)
-
-    new_words = jax.lax.dynamic_slice_in_dim(all_words, rate, buf.depth)
-    return MergeBuffer(words=new_words), out_words, dropped
+    dropped = jnp.maximum(queued - depth, 0).astype(jnp.int32)
+    new_words = jax.lax.dynamic_slice_in_dim(all_words_sorted, rate, depth)
+    return new_words, out_words, dropped
 
 
 def merge_drain_words(

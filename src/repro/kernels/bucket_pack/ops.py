@@ -17,10 +17,7 @@ import jax.numpy as jnp
 from repro.core import buckets as bk
 from repro.core import events as ev
 from repro.kernels.bucket_pack.kernel import E_TILE, bucket_pack_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.common import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("n_buckets", "capacity", "interpret"))
@@ -34,8 +31,7 @@ def bucket_pack(
     capacity: int,
     interpret: bool | None = None,
 ) -> bk.PackedBuckets:
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     words = ev.encode_word(addr, deadline, valid)
     e = bucket_id.shape[0]
     pad = (-e) % E_TILE

@@ -1,0 +1,53 @@
+"""Shared kernel-dispatch helpers for the Pallas kernel packages.
+
+Every ``ops.py`` wrapper used to carry its own copy of the same two-line
+backend probe (``jax.default_backend() == "tpu"``) and ``interpret=None``
+auto-detect.  This module is the single home for that policy:
+
+* :func:`resolve_interpret` — the one dispatch decision.  ``None`` means
+  "interpret off-TPU, compile on TPU" (the kernel body still executes —
+  in the Pallas interpreter — so CPU CI validates kernel semantics, not a
+  fallback).
+* ``REPRO_FORCE_INTERPRET=1`` — environment override that forces the
+  interpreter regardless of the caller's argument.  The CI
+  ``kernels-interpret`` leg sets it so every ``use_pallas`` code path is
+  exercised end-to-end on CPU runners instead of silently skipping the
+  kernels.
+
+The env var is read at trace time (the wrappers mark ``interpret``
+static), so flipping it mid-process requires clearing jit caches — CI
+sets it once per job, which is the intended use.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+FORCE_INTERPRET_ENV = "REPRO_FORCE_INTERPRET"
+
+
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def force_interpret() -> bool:
+    """True when ``REPRO_FORCE_INTERPRET`` requests the Pallas interpreter."""
+    return os.environ.get(FORCE_INTERPRET_ENV, "").strip().lower() not in (
+        "", "0", "false", "no")
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """The shared ``interpret=None`` auto-detect of every kernel wrapper.
+
+    Priority: the env override forces the interpreter; an explicit
+    ``True``/``False`` is honored otherwise; ``None`` interprets exactly
+    when not running on a TPU backend.
+    """
+    if force_interpret():
+        return True
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)

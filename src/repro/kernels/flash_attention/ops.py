@@ -18,11 +18,8 @@ from repro.kernels.flash_attention.kernel import (
     DEFAULT_BLOCK_Q,
     flash_attention_pallas,
 )
+from repro.kernels.common import resolve_interpret
 from repro.kernels.flash_attention.ref import attention_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(
@@ -43,8 +40,7 @@ def flash_attention(
     interpret: bool | None = None,
     force_kernel: bool = False,
 ) -> jax.Array:
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     if hq % hkv:

@@ -1,0 +1,6 @@
+"""Fused superstep drain megakernel (delivered words → merge → ring)."""
+
+from repro.kernels.fused_drain import ops, ref
+from repro.kernels.fused_drain.ops import fused_drain
+
+__all__ = ["ops", "ref", "fused_drain"]

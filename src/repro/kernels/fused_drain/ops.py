@@ -1,0 +1,81 @@
+"""jit'd public wrapper for the fused drain megakernel.
+
+Pads the delivered word lanes with sentinels (bitwise-invisible: every
+invalid lane carries the identical all-ones word, sorts after every real
+lane and deposits nothing), invokes the single-program Pallas kernel
+(interpret=True off-TPU), and slices the emission stream back to the
+caller's lane count.  The merge queue rides as a [1, depth] row; ``rate``
+mode emits ``rate`` words per substep, the other modes echo the (ordered)
+delivered lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import delays as dl
+from repro.core import events as ev
+from repro.kernels.common import resolve_interpret
+from repro.kernels.fused_drain.kernel import fused_drain_pallas
+from repro.kernels.fused_drain.ref import MODES, FusedDrainOut
+
+LANES = 128
+
+
+def _pad_row(x, n):
+    pad = n - x.shape[-1]
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, widths, constant_values=jnp.int32(ev.WORD_SENTINEL))
+    return x
+
+
+def _pow2_at_least(n: int, floor: int = LANES) -> int:
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "rate", "extra_ahead", "interpret"))
+def fused_drain(
+    ring: dl.DelayRing,
+    delivered: jax.Array,          # int32[B, L] post-mask word stream
+    queue: jax.Array | None,       # int32[depth] ("rate" mode)
+    t0,
+    *,
+    mode: str = "passthrough",
+    rate: int = 0,
+    extra_ahead: int = 0,
+    gate: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> FusedDrainOut:
+    if mode not in MODES:
+        raise ValueError(f"unknown drain mode {mode!r}")
+    interpret = resolve_interpret(interpret)
+    b, lanes = delivered.shape
+    lp = _pow2_at_least(lanes) if mode == "sort" else \
+        lanes + (-lanes) % LANES
+    delivered_p = _pad_row(delivered.astype(jnp.int32), lp)
+    if mode == "rate":
+        queue_row = jnp.asarray(queue, jnp.int32).reshape(1, -1)
+    else:
+        queue_row = jnp.full((1, 8), ev.WORD_SENTINEL, jnp.int32)
+    gate_cell = (jnp.ones((1, 1), jnp.int32) if gate is None
+                 else jnp.asarray(gate).astype(jnp.int32).reshape(1, 1))
+    ring_out, words, queue_out, stats = fused_drain_pallas(
+        delivered_p, queue_row, ring.ring,
+        jnp.asarray(t0, jnp.int32).reshape(1, 1), gate_cell,
+        mode=mode, rate=rate, extra_ahead=extra_ahead,
+        interpret=interpret)
+    if mode != "rate":
+        words = words[:, :lanes]
+    return FusedDrainOut(
+        ring=dl.DelayRing(ring=ring_out.astype(ring.ring.dtype),
+                          now=ring.now),
+        words=words, dep_expired=stats[0], dropped=stats[1],
+        queue=queue_out[0] if mode == "rate" else queue)

@@ -1,0 +1,109 @@
+"""jnp reference for the fused drain path — the composed single-op chain.
+
+This is, op for op, the per-substep destination half of
+:meth:`repro.core.fabric.PulseFabric._drain_block` after the exchange
+completes and the pipeline-validity / health masks have been applied to
+the delivered word stream: the (optional) merge stage, then the per-substep
+``deposit_words`` replay with each substep's own clock and the remaining
+deferral as ``min_ahead`` slack.  The Pallas megakernel (kernel.py) must
+reproduce it bitwise — tests/test_kernels.py drives both on
+hypothesis-generated edge cases.
+
+Three merge modes, matching the fabric's dispatch:
+
+* ``passthrough`` — simplified scheme: delivered words deposit directly
+  (the ring is order-free);
+* ``sort``        — full scheme without a rate limit: each substep's
+  words are time-ordered by the wrap-aware key (``merge_words``);
+* ``rate``        — full scheme with the stateful rate-limited queue
+  (``merge_drain_words``): arrivals enqueue, the ``rate``
+  earliest-deadline words emit per substep, queue overflow drops.
+
+``gate`` (a scalar bool) reproduces the pipelined schedule's empty-carry
+masking: a gated-off drain deposits nothing, emits sentinels and leaves
+the merge queue untouched.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import delays as dl
+from repro.core import events as ev
+from repro.core import merge as mg
+
+MODES = ("passthrough", "sort", "rate")
+
+
+class FusedDrainOut(NamedTuple):
+    """One drained block.
+
+    ring        : the updated delay ring (clock untouched — caller owns it)
+    words       : int32[B, R] the per-substep delivery stream the caller
+                  reports (R = merge rate in ``rate`` mode, else the
+                  delivered lane count)
+    dep_expired : int32[B] deposit-window expiries per substep
+    dropped     : int32[B] merge-queue congestion drops per substep
+    queue       : int32[depth] merge queue after the block (``rate`` mode;
+                  passed through unchanged otherwise, None in/None out)
+    """
+
+    ring: dl.DelayRing
+    words: jax.Array
+    dep_expired: jax.Array
+    dropped: jax.Array
+    queue: jax.Array | None
+
+
+def fused_drain_ref(
+    ring: dl.DelayRing,
+    delivered: jax.Array,          # int32[B, L] post-mask word stream
+    queue: jax.Array | None,       # int32[depth] merge queue ("rate" mode)
+    t0: jax.Array,
+    *,
+    mode: str = "passthrough",
+    rate: int = 0,
+    extra_ahead: int = 0,
+    gate: jax.Array | None = None,
+) -> FusedDrainOut:
+    """Composed single-op reference chain over all B substeps."""
+    if mode not in MODES:
+        raise ValueError(f"unknown drain mode {mode!r}")
+    b = delivered.shape[0]
+    if gate is not None:
+        delivered = jnp.where(gate, delivered, jnp.int32(ev.WORD_SENTINEL))
+
+    merge_out = None
+    dropped = jnp.zeros((b,), jnp.int32)
+    if mode == "rate":
+        buf = mg.MergeBuffer(words=queue)
+        new_buf, merge_out, dropped = mg.merge_drain_words(
+            buf, delivered, now0=t0, rate=rate)
+        if gate is not None:
+            new_buf = jax.tree.map(
+                lambda n, o: jnp.where(gate, n, o), new_buf, buf)
+            merge_out = jnp.where(gate, merge_out,
+                                  jnp.int32(ev.WORD_SENTINEL))
+            dropped = jnp.where(gate, dropped, 0)
+        queue = new_buf.words
+
+    out_words, dep_expired = [], []
+    for k in range(b):
+        now_k = t0 + k
+        defer_k = (b - 1) - k
+        if mode == "rate":
+            words_k = merge_out[k]
+        elif mode == "sort":
+            words_k = mg.merge_words(delivered[k], now_k)
+        else:
+            words_k = delivered[k]
+        ring, expired = dl.deposit_words(
+            ring, words_k, now=now_k, min_ahead=extra_ahead + defer_k)
+        out_words.append(words_k)
+        dep_expired.append(expired)
+    return FusedDrainOut(
+        ring=ring, words=jnp.stack(out_words),
+        dep_expired=jnp.stack(dep_expired), dropped=dropped, queue=queue)

@@ -1,0 +1,6 @@
+"""Fused superstep inject megakernel (events/LIF → flush slab)."""
+
+from repro.kernels.fused_inject import ops, ref
+from repro.kernels.fused_inject.ops import fused_inject, fused_lif_inject
+
+__all__ = ["ops", "ref", "fused_inject", "fused_lif_inject"]

@@ -1,0 +1,144 @@
+"""jit'd public wrappers for the fused inject megakernel.
+
+Pads the event lanes to the VPU lane width (invalid lanes can never route:
+``valid=0``), squeezes the fan-out-1 routing table into the kernel's
+``[N, 4]`` int32 matrix (padded rows carry ``valid=0``), invokes the
+single-program Pallas kernel (interpret=True off-TPU), and re-orients the
+column-major kernel outputs into the :class:`FusedInjectOut` layout the
+fabric consumes.  The fused path requires ``table.fanout == 1`` (the
+paper's simplified single-destination scheme); the fabric falls back to
+the unfused chain otherwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core import routing as rt
+from repro.kernels.common import resolve_interpret
+from repro.kernels.fused_inject.kernel import (fused_inject_pallas,
+                                               fused_lif_inject_pallas)
+from repro.kernels.fused_inject.ref import FusedInjectOut, FusedLifInjectOut
+
+LANES = 128
+SUBLANES = 8
+
+
+def _pad_to(x, m, axis, value):
+    pad = (-x.shape[axis]) % m
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _table_matrix(table: rt.RoutingTable) -> tuple[jax.Array, int]:
+    if table.fanout != 1:
+        raise ValueError(
+            f"fused inject requires fanout 1, got {table.fanout}")
+    tbl = jnp.stack([
+        table.dest_chip[:, 0].astype(jnp.int32),
+        table.dest_addr[:, 0].astype(jnp.int32),
+        table.delay[:, 0].astype(jnp.int32),
+        table.valid[:, 0].astype(jnp.int32),
+    ], axis=1)                                        # [N, 4]
+    return _pad_to(tbl, SUBLANES, 0, 0), table.n_neurons
+
+
+def _reach_row(reach, n_chips: int) -> jax.Array:
+    if reach is None:
+        return jnp.ones((1, n_chips), jnp.int32)
+    return jnp.asarray(reach).astype(jnp.int32).reshape(1, n_chips)
+
+
+def _reorient(slab2, counts_t, traffic_t, stats, *, nb, capacity):
+    b = slab2.shape[1]
+    slab = slab2.reshape(nb, capacity, b).transpose(0, 2, 1)
+    return FusedInjectOut(
+        slab=slab, counts=counts_t.T, sent=stats[0], overflow=stats[1],
+        wrap_expired=stats[2], lost=stats[3], traffic=traffic_t.T)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_chips", "buckets_per_chip", "capacity", "mode", "time_window",
+    "interpret"))
+def fused_inject(
+    events: ev.EventBuffer,        # [B, E]
+    table: rt.RoutingTable,
+    reach,                         # bool[n_chips] | None
+    t0,
+    *,
+    n_chips: int,
+    buckets_per_chip: int,
+    capacity: int,
+    mode: str = "simplified",
+    time_window: int = 1,
+    interpret: bool | None = None,
+) -> FusedInjectOut:
+    interpret = resolve_interpret(interpret)
+    addr = _pad_to(events.addr.astype(jnp.int32), LANES, 1, 0)
+    time = _pad_to(events.time.astype(jnp.int32), LANES, 1, 0)
+    valid = _pad_to(events.valid.astype(jnp.int32), LANES, 1, 0)
+    tbl, n_real = _table_matrix(table)
+    out = fused_inject_pallas(
+        addr, time, valid, tbl, _reach_row(reach, n_chips),
+        jnp.asarray(t0, jnp.int32).reshape(1, 1),
+        n_real=n_real, n_chips=n_chips,
+        buckets_per_chip=buckets_per_chip, capacity=capacity, mode=mode,
+        time_window=time_window, interpret=interpret)
+    return _reorient(*out, nb=n_chips * buckets_per_chip,
+                     capacity=capacity)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "event_capacity", "n_chips", "buckets_per_chip", "capacity", "mode",
+    "time_window", "interpret"))
+def fused_lif_inject(
+    v: jax.Array,                  # f32[N]
+    refrac: jax.Array,             # int32[N]
+    currents: jax.Array,           # f32[B, N]
+    params,                        # repro.snn.neuron.LIFParams
+    table: rt.RoutingTable,
+    reach,
+    t0,
+    *,
+    event_capacity: int,
+    n_chips: int,
+    buckets_per_chip: int,
+    capacity: int,
+    mode: str = "simplified",
+    time_window: int = 1,
+    interpret: bool | None = None,
+) -> FusedLifInjectOut:
+    interpret = resolve_interpret(interpret)
+    n = currents.shape[1]
+    # Neuron-lane padding: pad lanes sit at v == v_th == 0 with tau == 1,
+    # so the strict threshold can never fire them.
+    row = lambda x, val, dt: _pad_to(
+        jnp.broadcast_to(jnp.asarray(x, dt), (n,)).reshape(1, n),
+        LANES, 1, val)
+    params_f = jnp.concatenate([
+        row(params.tau_m, 1, jnp.float32), row(params.v_th, 0, jnp.float32),
+        row(params.v_reset, 0, jnp.float32),
+        row(params.v_rest, 0, jnp.float32)], axis=0)
+    tbl, n_real = _table_matrix(table)
+    out = fused_lif_inject_pallas(
+        row(v, 0, jnp.float32), row(refrac, 0, jnp.int32),
+        _pad_to(currents.astype(jnp.float32), LANES, 1, 0),
+        params_f, row(params.refrac, 0, jnp.int32),
+        tbl, _reach_row(reach, n_chips),
+        jnp.asarray(t0, jnp.int32).reshape(1, 1),
+        event_capacity=event_capacity, n_real=n_real, n_chips=n_chips,
+        buckets_per_chip=buckets_per_chip, capacity=capacity, mode=mode,
+        time_window=time_window, interpret=interpret)
+    v_out, refrac_out, spikes, voltage = out[:4]
+    inject = _reorient(*out[4:], nb=n_chips * buckets_per_chip,
+                       capacity=capacity)
+    return FusedLifInjectOut(
+        v=v_out[0, :n], refrac=refrac_out[0, :n], spikes=spikes[:, :n],
+        voltage=voltage[:, :n], inject=inject)

@@ -8,18 +8,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.lif_step.kernel import BLOCK, lif_step_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def lif_step(v, refrac, current, tau_m, v_th, v_reset, v_rest, refrac_period,
              *, interpret: bool | None = None):
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     shape = v.shape
     flat = lambda x, dt: jnp.broadcast_to(x, shape).astype(dt).reshape(-1)
     args = [flat(v, jnp.float32), flat(refrac, jnp.int32), flat(current, jnp.float32),

@@ -17,14 +17,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import events as ev
+from repro.kernels.common import resolve_interpret
 from repro.kernels.merge_sort.kernel import (merge_sort_pallas,
                                              merge_sort_words_pallas)
 
 MIN_LANES = 128
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def _next_pow2(n: int) -> int:
@@ -42,8 +39,7 @@ def merge_sort(
     *,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     l = addr.shape[0]
     n = max(MIN_LANES, _next_pow2(l))
     pad = n - l
@@ -71,8 +67,7 @@ def merge_sort_words(
     comparator parks padding strictly after every real lane: the leading L
     lanes of the sorted result are exactly the sorted real lanes.
     """
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     l = words.shape[0]
     n = max(MIN_LANES, _next_pow2(l))
     pad = n - l

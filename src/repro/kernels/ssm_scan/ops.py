@@ -9,12 +9,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.ssm_scan.kernel import BLOCK_D, BLOCK_T, ssm_scan_pallas
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(
@@ -23,8 +20,7 @@ def _on_tpu() -> bool:
 def ssm_scan(x, dt, A, Bm, Cm, D, *, interpret: bool | None = None,
              block_d: int = BLOCK_D, block_t: int = BLOCK_T,
              force_kernel: bool = False):
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     b, t, din = x.shape
     if not force_kernel and (t < block_t and din < block_d):
         return ssm_scan_ref(x, dt, A, Bm, Cm, D)

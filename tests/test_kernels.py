@@ -1,9 +1,17 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret on CPU) vs jnp oracle."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret on CPU) vs jnp oracle.
+
+The fused megakernel sections at the bottom are hypothesis property
+sweeps (auto-skipped when hypothesis is not installed — see conftest):
+randomized loads designed around the bitwise edge cases — all-invalid
+event blocks, slab overflow, deadlines wrapping 255→0, a full merge
+queue, and the B=1 degeneracy.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.kernels.bucket_pack import bucket_pack
 from repro.kernels.bucket_pack.ref import bucket_pack_ref
@@ -201,6 +209,150 @@ def test_ssm_scan_matches_ref(b, t, din, n):
     want = ssm_scan_ref(x, dt, A, Bm, Cm, D)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fused inject megakernel: property sweep vs the composed reference
+# ---------------------------------------------------------------------------
+
+def _inject_case(seed, B, E, density, tight):
+    """Random event block + routing table, skewed at the edge cases:
+    density 0.0 is the all-invalid block, ``tight`` shrinks the bucket
+    capacity to force slab overflow, and t0 near 250 pushes deadlines
+    across the 255→0 wrap."""
+    from repro.core import events as ev
+    from repro.core import routing as rt
+
+    rng = np.random.default_rng(seed)
+    n = 24
+    t0 = int(rng.choice([0, 5, 120, 250, 254]))
+    addr = jnp.asarray(rng.integers(0, n, (B, E)), jnp.int32)
+    time = jnp.asarray(t0 + rng.integers(0, B + 1, (B, E)), jnp.int32)
+    valid = jnp.asarray(rng.random((B, E)) < density)
+    events = ev.EventBuffer(addr=addr, time=time, valid=valid)
+    table = rt.random_table(jax.random.PRNGKey(seed % 997), n, 4,
+                            max_delay=12, min_delay=max(2, B))
+    reach = (None if rng.random() < 0.5
+             else jnp.asarray(rng.random(4) < 0.8))
+    cap = 2 if tight else 8
+    return events, table, reach, t0, cap
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]),
+       st.integers(1, 100), st.sampled_from(["simplified", "full"]),
+       st.sampled_from([0.0, 0.6, 1.0]), st.booleans())
+def test_fused_inject_property(seed, B, E, mode, density, tight):
+    from repro.kernels.fused_inject import fused_inject
+    from repro.kernels.fused_inject.ref import fused_inject_ref
+
+    events, table, reach, t0, cap = _inject_case(seed, B, E, density,
+                                                 tight)
+    kw = dict(n_chips=4, buckets_per_chip=2, capacity=cap, mode=mode,
+              time_window=4)
+    got = fused_inject(events, table, reach, jnp.int32(t0), **kw)
+    want = fused_inject_ref(events, table, reach, jnp.int32(t0), **kw)
+    for fld in want._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, fld)), np.asarray(getattr(want, fld)),
+            err_msg=f"{fld} (B={B} E={E} mode={mode} d={density} "
+                    f"tight={tight})")
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 4]),
+       st.sampled_from([3, 20, 64]))
+def test_fused_lif_inject_property(seed, B, event_capacity):
+    """The LIF-fronted megakernel (membrane update + spike detect fused
+    ahead of the inject path) against lif_step + from_spikes + the
+    composed chain — including event_capacity below and above the
+    population size (truncation and degenerate B=1)."""
+    from repro.core import routing as rt
+    from repro.kernels.fused_inject import fused_lif_inject
+    from repro.kernels.fused_inject.ref import fused_lif_inject_ref
+    from repro.snn.neuron import LIFParams
+
+    rng = np.random.default_rng(seed)
+    n = 20
+    t0 = int(rng.choice([0, 250]))
+    v = jnp.asarray(rng.normal(0, 1, (n,)), jnp.float32)
+    refrac = jnp.asarray(rng.integers(0, 3, (n,)), jnp.int32)
+    cur = jnp.asarray(rng.normal(0.5, 1.0, (B, n)), jnp.float32)
+    params = LIFParams(tau_m=10.0, v_th=1.0, v_reset=0.0, v_rest=0.0,
+                       refrac=2)
+    table = rt.random_table(jax.random.PRNGKey(seed % 991), n, 4,
+                            max_delay=12, min_delay=max(2, B))
+    kw = dict(event_capacity=event_capacity, n_chips=4,
+              buckets_per_chip=2, capacity=4, mode="simplified",
+              time_window=1)
+    got = fused_lif_inject(v, refrac, cur, params, table, None,
+                           jnp.int32(t0), **kw)
+    want = fused_lif_inject_ref(v, refrac, cur, params, table, None,
+                                jnp.int32(t0), **kw)
+    for fld in ("v", "refrac", "spikes", "voltage"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, fld)), np.asarray(getattr(want, fld)),
+            err_msg=fld)
+    for fld in want.inject._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got.inject, fld)),
+            np.asarray(getattr(want.inject, fld)),
+            err_msg=f"inject.{fld}")
+
+
+# ---------------------------------------------------------------------------
+# Fused drain megakernel: property sweep vs the composed reference
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]),
+       st.integers(1, 70),
+       st.sampled_from(["passthrough", "sort", "rate"]),
+       st.sampled_from([0.0, 0.6, 1.0]), st.booleans(),
+       st.sampled_from([None, True, False]))
+def test_fused_drain_property(seed, B, L, mode, density, queue_full, gate):
+    """Wrap-aware sort + rate-limited merge + ring deposit fused, against
+    the composed merge/deposit chain — including the all-sentinel block
+    (density 0), a pre-filled merge queue (``queue_full`` → congestion
+    drops), deadlines wrapping 255→0, the pipeline gate in all three
+    states, and the B=1 degeneracy."""
+    from repro.core import delays as dl
+    from repro.core import events as ev
+    from repro.kernels.fused_drain import fused_drain
+    from repro.kernels.fused_drain.ref import fused_drain_ref
+
+    rng = np.random.default_rng(seed)
+    D, Nin, depth, rate = 12, 40, 16, 3
+    t0 = int(rng.choice([0, 100, 250, 254]))
+
+    def words(shape, spread, p):
+        a = jnp.asarray(rng.integers(0, 64, shape))
+        d = jnp.asarray(t0 + rng.integers(-6, spread, shape))
+        va = jnp.asarray(rng.random(shape) < p)
+        return ev.encode_word(a, d, va).astype(jnp.int32)
+
+    delivered = words((B, L), 40, density)
+    queue = (words((depth,), 10, 1.0 if queue_full else 0.4)
+             if mode == "rate" else None)
+    ring = dl.DelayRing(
+        ring=jnp.asarray(rng.integers(0, 3, (D, Nin)), jnp.int32),
+        now=jnp.int32(t0))
+    g = None if gate is None else jnp.asarray(gate)
+    kw = dict(mode=mode, rate=rate, extra_ahead=int(rng.choice([0, B])),
+              gate=g)
+    got = fused_drain(ring, delivered, queue, jnp.int32(t0), **kw)
+    want = fused_drain_ref(ring, delivered, queue, jnp.int32(t0), **kw)
+    np.testing.assert_array_equal(np.asarray(got.ring.ring),
+                                  np.asarray(want.ring.ring),
+                                  err_msg="ring")
+    for fld in ("words", "dep_expired", "dropped"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, fld)), np.asarray(getattr(want, fld)),
+            err_msg=f"{fld} (B={B} L={L} mode={mode} d={density})")
+    if mode == "rate":
+        np.testing.assert_array_equal(np.asarray(got.queue),
+                                      np.asarray(want.queue),
+                                      err_msg="queue")
 
 
 def test_ssm_scan_decode_parity_with_model_path():
