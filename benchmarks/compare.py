@@ -27,6 +27,17 @@ tracking).
 New rows (no baseline counterpart) and removed rows are reported but
 never fail — sweeps are allowed to grow.
 
+Rows carry a ``backend`` tag (``cpu``/``tpu``/``gpu``/``interpret``);
+when both sides are tagged and disagree, the row FAILS rather than
+silently mixing machines of different character — re-baseline on the
+matching backend.  Untagged rows (files written before the tag existed)
+are compared as before.  ``derived`` payloads are accepted both as
+structured dicts (current) and packed ``k=v;k=v`` strings (legacy
+baselines) via :func:`parse_derived`.  The ``telemetry_overhead_*``
+rows additionally carry an absolute fresh-side gate: their
+``derived["overhead"]`` (telemetry-on / telemetry-off time ratio) must
+stay <= ``TELEMETRY_OVERHEAD_MAX``.
+
 ``--fresh`` accepts several measurement files; each row's fastest
 observation is gated.  A transient load spike on a shared runner only
 ever makes a run *slower*, so requiring a row to regress in every
@@ -58,11 +69,45 @@ GATED_PREFIXES = (
     "pipeline_",
     "resilience_",
     "pod_",
+    "telemetry_",
 )
 
 # Rows faster than this are dominated by timer/dispatch noise on CI
 # runners; don't gate them.
 MIN_US = 50.0
+
+# Telemetry must stay within 5% of the untelemetered step: the
+# telemetry_overhead_* rows carry an on/off time ratio in
+# derived["overhead"], gated against this cap (a fresh-side absolute
+# check, independent of the baseline's timings).
+TELEMETRY_OVERHEAD_MAX = 1.05
+
+
+def parse_derived(derived) -> dict:
+    """Normalize a row's ``derived`` payload to a dict.
+
+    Current rows carry a structured dict; rows written before the
+    format change packed ``k=v;k=v`` strings (e.g.
+    ``"eff=0.427;of=0.052"``).  Both parse here — values are coerced to
+    int, then float, then kept as strings — so the committed baseline
+    keeps gating across the transition.
+    """
+    if isinstance(derived, dict):
+        return derived
+    out: dict = {}
+    for part in str(derived or "").split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        for cast in (int, float):
+            try:
+                out[k] = cast(v)
+                break
+            except ValueError:
+                continue
+        else:
+            out[k] = v
+    return out
 
 
 def load_rows(path: str) -> dict[str, dict]:
@@ -91,12 +136,36 @@ def compare(baseline: dict[str, dict], fresh: dict[str, dict],
     regressions, notes = [], []
     ratios: dict[str, float] = {}
     for name, row in sorted(fresh.items()):
+        if name.startswith("telemetry_overhead"):
+            overhead = parse_derived(row.get("derived")).get("overhead")
+            if overhead is None:
+                regressions.append(
+                    f"MALFORMED {name}: no derived overhead ratio")
+            elif float(overhead) > TELEMETRY_OVERHEAD_MAX:
+                regressions.append(
+                    f"REGRESSED {name}: telemetry overhead "
+                    f"{float(overhead):.3f}x exceeds "
+                    f"{TELEMETRY_OVERHEAD_MAX:.2f}x (MetricsCarry must "
+                    "stay within 5% of the untelemetered step)")
+            else:
+                notes.append(f"OK        {name}: telemetry overhead "
+                             f"{float(overhead):.3f}x "
+                             f"(cap {TELEMETRY_OVERHEAD_MAX:.2f}x)")
         if not name.startswith(GATED_PREFIXES):
             continue
         us = float(row.get("us_per_call", 0.0))
         base = baseline.get(name)
         if base is None:
             notes.append(f"NEW       {name}: {us:.1f} us (no baseline)")
+            continue
+        base_backend = base.get("backend")
+        backend = row.get("backend")
+        if base_backend and backend and base_backend != backend:
+            regressions.append(
+                f"BACKEND   {name}: baseline measured on "
+                f"'{base_backend}', fresh on '{backend}' — refusing to "
+                "compare timings across backends (re-baseline on the "
+                "matching backend)")
             continue
         base_us = float(base.get("us_per_call", 0.0))
         if base_us < min_us or us < min_us:

@@ -60,6 +60,7 @@ from repro.core import pulse_comm as pc
 from repro.core import routing as rt
 from repro.core import topology as tpo
 from repro.core import transport as tp
+from repro.obs.trace import phase_scope
 
 # Axis name used by the internal vmap of the local path.  Deliberately
 # obscure so it cannot collide with a user's mesh axis inside shard_map.
@@ -521,11 +522,14 @@ class PulseFabric:
         the *previous* block's issued exchange instead of its own.
         """
         t0 = ring.now
-        slab, inject, flow, sendq = self._inject_block(
-            events, table, flow, sendq, t0)
-        issued = pc.exchange_flush_issue(self.cfg, self.transport, slab)
-        ring, delivered, stats, merge = self._drain_block(
-            ring, merge, issued, inject, t0)
+        with phase_scope("fabric/inject"):
+            slab, inject, flow, sendq = self._inject_block(
+                events, table, flow, sendq, t0)
+        with phase_scope("fabric/exchange"):
+            issued = pc.exchange_flush_issue(self.cfg, self.transport, slab)
+        with phase_scope("fabric/drain"):
+            ring, delivered, stats, merge = self._drain_block(
+                ring, merge, issued, inject, t0)
         return ring, delivered, stats, flow, merge, sendq
 
     def _inject_block(
@@ -1048,14 +1052,17 @@ class PulseFabric:
         """
         b = events.addr.shape[0]
         t0 = ring.now
-        slab, inject, flow, sendq = self._inject_block(
-            events, table, flow, sendq, t0)
-        issued = pc.exchange_flush_issue(self.cfg, self.transport, slab)
-        ring, delivered, stats, merge = self._drain_block(
-            ring, merge,
-            pc.IssuedFlush(words=pending.words, link=pending.link),
-            pending.inject, pending.t0,
-            extra_ahead=b, valid=pending.valid)
+        with phase_scope("fabric/inject"):
+            slab, inject, flow, sendq = self._inject_block(
+                events, table, flow, sendq, t0)
+        with phase_scope("fabric/exchange"):
+            issued = pc.exchange_flush_issue(self.cfg, self.transport, slab)
+        with phase_scope("fabric/drain"):
+            ring, delivered, stats, merge = self._drain_block(
+                ring, merge,
+                pc.IssuedFlush(words=pending.words, link=pending.link),
+                pending.inject, pending.t0,
+                extra_ahead=b, valid=pending.valid)
         pending = pc.PipelineCarry(
             words=issued.words, link=issued.link, inject=inject,
             t0=jnp.asarray(t0, jnp.int32),
@@ -1073,11 +1080,12 @@ class PulseFabric:
         deposit guard (``extra_ahead=0`` — nothing popped its slots beyond
         the in-block deferral, exactly as if the serial schedule had
         drained it in place) and return a reset (empty) carry."""
-        ring, delivered, stats, merge = self._drain_block(
-            ring, merge,
-            pc.IssuedFlush(words=pending.words, link=pending.link),
-            pending.inject, pending.t0,
-            extra_ahead=0, valid=pending.valid)
+        with phase_scope("fabric/flush"):
+            ring, delivered, stats, merge = self._drain_block(
+                ring, merge,
+                pc.IssuedFlush(words=pending.words, link=pending.link),
+                pending.inject, pending.t0,
+                extra_ahead=0, valid=pending.valid)
         empty = pc.PipelineCarry(
             words=jnp.full_like(pending.words, ev.WORD_SENTINEL),
             link=jax.tree.map(jnp.zeros_like, pending.link),

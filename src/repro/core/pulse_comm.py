@@ -36,6 +36,7 @@ from repro.core import events as ev
 from repro.core import merge as mg
 from repro.core import routing as rt
 from repro.core import transport as tp
+from repro.obs.trace import phase_scope
 
 # On-wire cost model (bytes). A pulse event is 14-bit address + 8-bit
 # timestamp packed into ONE wire word (paper §2) -> 3 bytes, padded to 4 on
@@ -339,6 +340,13 @@ def exchange_flush_issue(
     :class:`IssuedFlush` carries the raw transport-layout delivery for a
     later :func:`exchange_flush_complete`.
     """
+    with phase_scope("pulse_comm/exchange_issue"):
+        return _exchange_flush_issue(cfg, transport, slab)
+
+
+def _exchange_flush_issue(
+    cfg: PulseCommConfig, transport: tp.Transport, slab: jax.Array
+) -> IssuedFlush:
     b = slab.shape[1]
     shape = (cfg.n_chips, cfg.buckets_per_chip, b, cfg.bucket_capacity)
     block = slab.reshape(shape)
@@ -377,13 +385,14 @@ def exchange_flush_complete(
     its words are re-timed under the recompiled plan — exactly what a
     replayed in-flight word experiences on the detoured routes.
     """
-    words = issued.words
-    if hasattr(transport, "exchange_words_finish"):
-        words = transport.exchange_words_finish(words)
-    b = words.shape[2]
-    # [n_chips(src), bpc, B, C] -> [B, n_chips * bpc * C] per substep
-    out = jnp.moveaxis(words, 2, 0).reshape(b, cfg.lanes_in)
-    return out, issued.link
+    with phase_scope("pulse_comm/exchange_complete"):
+        words = issued.words
+        if hasattr(transport, "exchange_words_finish"):
+            words = transport.exchange_words_finish(words)
+        b = words.shape[2]
+        # [n_chips(src), bpc, B, C] -> [B, n_chips * bpc * C] per substep
+        out = jnp.moveaxis(words, 2, 0).reshape(b, cfg.lanes_in)
+        return out, issued.link
 
 
 def exchange_flush(

@@ -327,3 +327,26 @@ def analyze_collectives_only(text: str) -> dict:
         "counts": st.collective_counts,
         "total_bytes": st.total_collective_bytes,
     }
+
+
+def count_collectives(compiled, kind: str | None = None):
+    """Count collective ops in a compiled executable (or HLO text).
+
+    ``compiled`` is either the object returned by
+    ``jax.jit(fn).lower(...).compile()`` (anything with ``as_text()``)
+    or an HLO module string.  With ``kind`` (e.g. ``"all-to-all"``,
+    ``"all-reduce"``, ``"collective-permute"``) returns that op's count
+    as an int (0 when absent); with ``kind=None`` returns the full
+    ``{op_kind: count}`` dict.
+
+    This is the shared form of the one-collective-per-block pins in
+    tests/test_superstep.py / test_pipeline.py / test_wire.py::
+
+        assert hlo_stats.count_collectives(compiled, "all-to-all") == 1
+        assert sum(hlo_stats.count_collectives(compiled).values()) == 1
+    """
+    text = compiled if isinstance(compiled, str) else compiled.as_text()
+    counts = dict(analyze(text).collective_counts)
+    if kind is None:
+        return counts
+    return int(counts.get(kind, 0))

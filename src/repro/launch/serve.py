@@ -2,6 +2,14 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
       --reduced --batch 4 --prompt-len 32 --gen 16
+
+Telemetry: ``--metrics-out PATH`` writes a Prometheus-style text
+exposition of the serve latencies/throughput (scrape-ready for a node
+exporter's textfile collector), and ``--events-jsonl PATH`` appends the
+per-phase span events as structured JSONL.  Both ride the
+:mod:`repro.obs` exporters — the same subsystem the fabric's in-scan
+metrics use — so the streaming-serve path (ROADMAP) can grow admission
+control on top of the identical plumbing.
 """
 
 from __future__ import annotations
@@ -14,6 +22,7 @@ import jax.numpy as jnp
 
 from repro import configs as C
 from repro.models import lm
+from repro.obs import JsonlLogger, SpanTimer, prometheus_text
 
 
 def main() -> None:
@@ -25,6 +34,10 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--metrics-out",
+                    help="write Prometheus text exposition here on exit")
+    ap.add_argument("--events-jsonl",
+                    help="append per-phase span events here (JSONL)")
     args = ap.parse_args()
 
     cfg = C.get(args.arch)
@@ -33,6 +46,9 @@ def main() -> None:
     key = jax.random.PRNGKey(args.seed)
     params = lm.init(key, cfg)
     b, s = args.batch, args.prompt_len
+
+    timer = SpanTimer()
+    events = JsonlLogger(args.events_jsonl) if args.events_jsonl else None
 
     if cfg.is_encdec:
         batch = {
@@ -46,12 +62,16 @@ def main() -> None:
 
     prefill = jax.jit(lambda p, bt: lm.prefill(cfg, p, bt))
     t0 = time.time()
-    logits, cache = prefill(params, batch)
-    cache = lm.pad_cache(cfg, cache, prompt_len + args.gen)
-    jax.block_until_ready(logits)
+    with timer.span("serve/prefill"):
+        logits, cache = prefill(params, batch)
+        cache = lm.pad_cache(cfg, cache, prompt_len + args.gen)
+        jax.block_until_ready(logits)
     t_prefill = time.time() - t0
     print(f"prefill: {b}x{prompt_len} in {t_prefill*1e3:.1f} ms "
           f"({b*prompt_len/t_prefill:,.0f} tok/s)")
+    if events is not None:
+        events.emit("prefill", batch=b, prompt_len=prompt_len,
+                    ms=t_prefill * 1e3)
 
     decode = jax.jit(
         lambda p, tok, c, pos: lm.decode(cfg, p, tok, c, pos)
@@ -67,16 +87,39 @@ def main() -> None:
     t0 = time.time()
     for i in range(args.gen - 1):
         key = jax.random.fold_in(key, i)
-        logits_i, cache = decode(params, tok, cache,
-                                 jnp.asarray(prompt_len + i, jnp.int32))
-        tok = sample(logits_i, key)
+        with timer.span("serve/decode_step"):
+            logits_i, cache = decode(params, tok, cache,
+                                     jnp.asarray(prompt_len + i, jnp.int32))
+            tok = sample(logits_i, key)
         out_tokens.append(tok)
     jax.block_until_ready(tok)
     t_dec = time.time() - t0
     gen = jnp.stack(out_tokens, axis=1)
+    tok_s = b * args.gen / max(t_dec, 1e-9)
     print(f"decode: {args.gen} steps x batch {b} in {t_dec*1e3:.1f} ms "
-          f"({b*args.gen/max(t_dec,1e-9):,.0f} tok/s)")
+          f"({tok_s:,.0f} tok/s)")
     print("sample output ids:", gen[0][:16].tolist())
+    if events is not None:
+        events.emit("decode", batch=b, steps=args.gen, ms=t_dec * 1e3,
+                    tok_s=tok_s)
+        events.close()
+
+    if args.metrics_out:
+        spans = timer.summary()
+        flat = {
+            "prefill_ms": t_prefill * 1e3,
+            "prefill_tok_s": b * prompt_len / max(t_prefill, 1e-9),
+            "decode_ms": t_dec * 1e3,
+            "decode_tok_s": tok_s,
+            "decode_ms_per_step":
+                spans.get("serve/decode_step", {}).get("mean_ms", 0.0),
+            "tokens_generated": b * args.gen,
+        }
+        with open(args.metrics_out, "w") as f:
+            f.write(prometheus_text(
+                flat, prefix="repro_serve",
+                labels={"arch": args.arch, "batch": str(b)}))
+        print(f"# metrics exposition -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

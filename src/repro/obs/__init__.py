@@ -1,0 +1,30 @@
+"""repro.obs — fabric telemetry: in-scan metrics aggregation, phase
+tracing, conservation checking, and the failure flight recorder.
+
+The package is deliberately free of ``repro.core`` imports so the core
+fabric can import :mod:`repro.obs.trace` for phase scopes without a
+cycle.  Everything device-side (``MetricsCarry``, ``FlightRing``) is a
+NamedTuple pytree updated with pure jnp ops — jit-safe, scan-safe,
+checkpoint-visible, zero host syncs.
+"""
+
+from repro.obs.conservation import ConservationReport, check_conservation
+from repro.obs.export import (JsonlLogger, prometheus_text, read_jsonl,
+                              summary_exposition, write_jsonl)
+from repro.obs.metrics import (HIST_EDGES, SCALAR_FIELDS, FlightRing,
+                               MetricsCarry, MetricsConfig, flight_init,
+                               metrics_init, metrics_summary,
+                               metrics_update)
+from repro.obs.recorder import dump_flight, flight_rows, load_flight
+from repro.obs.trace import SpanTimer, phase_scope
+
+__all__ = [
+    "ConservationReport", "check_conservation",
+    "JsonlLogger", "prometheus_text", "read_jsonl",
+    "summary_exposition", "write_jsonl",
+    "HIST_EDGES", "SCALAR_FIELDS", "FlightRing",
+    "MetricsCarry", "MetricsConfig", "flight_init",
+    "metrics_init", "metrics_summary", "metrics_update",
+    "dump_flight", "flight_rows", "load_flight",
+    "SpanTimer", "phase_scope",
+]

@@ -1,0 +1,271 @@
+"""Device-resident metrics aggregation for the pulse fabric.
+
+``MetricsCarry`` is a NamedTuple pytree threaded through the snn scan
+exactly like ``flow``/``merge``/``sendq``: updated once per fabric call
+with pure jnp ops (zero host syncs), carried across superstep blocks,
+checkpoint-visible, and entirely absent (``None``) when telemetry is
+off — the delivered spike path never reads it, so disabling telemetry
+is bitwise-trivially invariant.
+
+Aggregates, per ``CommStats`` scalar field (fleet = summed over chips):
+
+* cumulative totals (fleet and per-chip),
+* an exponential moving average of the per-substep fleet value,
+* the per-substep fleet maximum,
+* a small fixed-bucket histogram over power-of-two edges,
+
+plus per-port link word/backlog totals and utilization-vs-capacity
+EMAs, merge-queue and pipeline in-flight occupancy EMAs/maxima, and a
+fixed-depth **flight ring** of the last K blocks' per-chip stats that
+``ResilientRunner`` dumps on ``ChipFailure``.
+
+All counters are int32 (consistent with the fabric's stats dtypes; at
+fleet scale they wrap after ~2^31 events — the EMA/histograms stay
+meaningful regardless, and the run-level totals are intended for
+bounded drills and serving windows, not multi-day accumulation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# CommStats scalar fields aggregated per chip.  ``utilization`` (float,
+# a ratio) and the array-valued fields (traffic, link_*) are handled
+# separately.
+SCALAR_FIELDS = ("sent", "overflow", "merge_dropped", "expired",
+                 "stalled", "wire_bytes", "lost_to_failure")
+N_FIELDS = len(SCALAR_FIELDS)
+
+# Power-of-two histogram edges over per-substep fleet values: bucket 0
+# counts substeps with value 0, bucket k counts values in
+# [EDGES[k-1], EDGES[k]), the last bucket is unbounded.
+HIST_EDGES = (1, 2, 4, 8, 16, 32, 64)
+N_BUCKETS = len(HIST_EDGES) + 1
+
+# Flight-ring rows: the CommStats scalars plus the per-chip link word
+# volume and end-of-block link backlog (the pre-failure congestion
+# trajectory post-mortems need).
+FLIGHT_FIELDS = SCALAR_FIELDS + ("link_words", "link_backlog")
+N_FLIGHT_FIELDS = len(FLIGHT_FIELDS)
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsConfig:
+    """Static telemetry knobs (hashable; safe as a jit constant).
+
+    ``ema_alpha`` — per-substep EMA decay (state' = a*state + (1-a)*x).
+    ``flight_depth`` — K, blocks retained in the flight ring.
+    ``link_capacity`` — words a link carries per substep (0 = unknown;
+    the link utilization EMA then tracks raw words/substep instead of a
+    ratio).  ``snn.network`` fills this from the topology's
+    ``link_bandwidth`` when left at 0.
+    """
+
+    ema_alpha: float = 0.9
+    flight_depth: int = 16
+    link_capacity: int = 0
+
+
+class FlightRing(NamedTuple):
+    """Fixed-depth device ring of the last K blocks' per-chip stats.
+
+    ``blocks`` — int32[K, N_FLIGHT_FIELDS, n_chips], rows ordered as
+    ``FLIGHT_FIELDS`` (block sums; ``link_backlog`` is the end-of-block
+    level).  ``t0`` — int32[K] substep index at block start.  ``idx`` —
+    int32[] total blocks ever recorded (write cursor = idx % K).
+    """
+
+    blocks: jax.Array
+    t0: jax.Array
+    idx: jax.Array
+
+
+def flight_init(depth: int, n_chips: int) -> FlightRing:
+    return FlightRing(
+        blocks=jnp.zeros((depth, N_FLIGHT_FIELDS, n_chips), jnp.int32),
+        t0=jnp.zeros((depth,), jnp.int32),
+        idx=jnp.int32(0))
+
+
+class MetricsCarry(NamedTuple):
+    steps: jax.Array          # i32[]  substeps aggregated
+    blocks: jax.Array         # i32[]  fabric calls aggregated
+    totals: jax.Array         # i32[N_FIELDS]           fleet cumulative
+    chip_totals: jax.Array    # i32[N_FIELDS, n_chips]  per-chip cumulative
+    ema: jax.Array            # f32[N_FIELDS]  EMA of per-substep fleet value
+    maxima: jax.Array         # i32[N_FIELDS]  max per-substep fleet value
+    hist: jax.Array           # i32[N_FIELDS, N_BUCKETS]
+    util_ema: jax.Array       # f32[]  EMA of mean bucket utilization
+    link_words: jax.Array     # i32[n_chips, n_ports]  cumulative
+    link_backlog: jax.Array   # i32[n_chips, n_ports]  cumulative backlog-steps
+    link_util_ema: jax.Array  # f32[n_chips, n_ports]  EMA words/substep (/cap)
+    merge_occ_ema: jax.Array  # f32[]  EMA of fleet merge-queue occupancy
+    merge_occ_max: jax.Array  # i32[]
+    inflight_ema: jax.Array   # f32[]  EMA of fleet pipeline in-flight words
+    inflight_max: jax.Array   # i32[]
+    flight: FlightRing
+
+
+def metrics_init(mcfg: MetricsConfig, n_chips: int,
+                 n_ports: int = 1) -> MetricsCarry:
+    return MetricsCarry(
+        steps=jnp.int32(0),
+        blocks=jnp.int32(0),
+        totals=jnp.zeros((N_FIELDS,), jnp.int32),
+        chip_totals=jnp.zeros((N_FIELDS, n_chips), jnp.int32),
+        ema=jnp.zeros((N_FIELDS,), jnp.float32),
+        maxima=jnp.zeros((N_FIELDS,), jnp.int32),
+        hist=jnp.zeros((N_FIELDS, N_BUCKETS), jnp.int32),
+        util_ema=jnp.float32(0.0),
+        link_words=jnp.zeros((n_chips, n_ports), jnp.int32),
+        link_backlog=jnp.zeros((n_chips, n_ports), jnp.int32),
+        link_util_ema=jnp.zeros((n_chips, n_ports), jnp.float32),
+        merge_occ_ema=jnp.float32(0.0),
+        merge_occ_max=jnp.int32(0),
+        inflight_ema=jnp.float32(0.0),
+        inflight_max=jnp.int32(0),
+        flight=flight_init(mcfg.flight_depth, n_chips))
+
+
+def _block(x: jax.Array, step_ndim: int) -> jax.Array:
+    """Normalize a stats field to block shape [B, ...].
+
+    ``step_ndim`` is the field's rank on the single-step path (1 for
+    per-chip scalars, 2 for per-chip-per-port link fields); a leading
+    substep axis is added when absent.
+    """
+    return x[None] if x.ndim == step_ndim else x
+
+
+def _ema_block(alpha, state, xs):
+    """Fold a length-B substep sequence into an EMA state in one shot.
+
+    Equivalent to ``for x in xs: state = a*state + (1-a)*x`` — the
+    closed form ``a^B * state + (1-a) * sum_k a^(B-1-k) * xs[k]`` keeps
+    the update vectorized inside the scan.  ``xs`` is [B, ...]; weights
+    broadcast over the trailing dims.
+    """
+    b = xs.shape[0]
+    k = jnp.arange(b - 1, -1, -1, dtype=jnp.float32)
+    w = (1.0 - alpha) * alpha ** k
+    w = w.reshape((b,) + (1,) * (xs.ndim - 1))
+    return alpha ** b * state + (w * xs.astype(jnp.float32)).sum(0)
+
+
+def metrics_update(mcfg: MetricsConfig, m: MetricsCarry, stats: Any, *,
+                   merge: Any = None, pending: Any = None) -> MetricsCarry:
+    """Fold one fabric call's ``CommStats`` into the carry (jit-safe).
+
+    ``stats`` fields may be per-step ``[n_chips]`` or per-block
+    ``[B, n_chips]`` (link fields with a trailing port axis); both the
+    serial ``step`` path and the superstep/pipeline block paths land
+    here.  ``merge``/``pending`` are the post-call carries whose
+    ``occupancy()`` levels are sampled once per block.
+    """
+    alpha = jnp.float32(mcfg.ema_alpha)
+
+    per_chip = jnp.stack(
+        [_block(getattr(stats, f), 1).astype(jnp.int32)
+         for f in SCALAR_FIELDS])                    # [N_FIELDS, B, n_chips]
+    fleet = per_chip.sum(-1)                          # [N_FIELDS, B]
+    n_sub = fleet.shape[1]
+
+    totals = m.totals + fleet.sum(-1)
+    chip_totals = m.chip_totals + per_chip.sum(1)
+    maxima = jnp.maximum(m.maxima, fleet.max(-1))
+
+    edges = jnp.asarray(HIST_EDGES, jnp.int32)
+    bucket = (fleet[..., None] >= edges).sum(-1)      # [N_FIELDS, B]
+    onehot = (bucket[..., None]
+              == jnp.arange(N_BUCKETS)).astype(jnp.int32)
+    hist = m.hist + onehot.sum(1)
+
+    ema = _ema_block(alpha, m.ema, fleet.T)           # fold over substeps
+
+    util = _block(getattr(stats, "utilization"), 1).astype(jnp.float32)
+    util_ema = _ema_block(alpha, m.util_ema, util.mean(-1))
+
+    lw = _block(getattr(stats, "link_words"), 2)      # [B, n_chips, n_ports]
+    lb = _block(getattr(stats, "link_backlog"), 2)
+    link_words = m.link_words + lw.sum(0).astype(jnp.int32)
+    link_backlog = m.link_backlog + lb.sum(0).astype(jnp.int32)
+    cap = float(mcfg.link_capacity) if mcfg.link_capacity > 0 else 1.0
+    link_util_ema = _ema_block(alpha, m.link_util_ema,
+                               lw.astype(jnp.float32) / cap)
+
+    merge_occ_ema, merge_occ_max = m.merge_occ_ema, m.merge_occ_max
+    if merge is not None:
+        occ = merge.occupancy().sum().astype(jnp.int32)
+        merge_occ_ema = alpha * merge_occ_ema + (1 - alpha) * occ
+        merge_occ_max = jnp.maximum(merge_occ_max, occ)
+    inflight_ema, inflight_max = m.inflight_ema, m.inflight_max
+    if pending is not None:
+        occ = pending.occupancy().sum().astype(jnp.int32)
+        inflight_ema = alpha * inflight_ema + (1 - alpha) * occ
+        inflight_max = jnp.maximum(inflight_max, occ)
+
+    # Flight ring: one row per fabric call — per-chip block sums plus
+    # the link word volume and end-of-block backlog level.
+    row = jnp.concatenate([
+        per_chip.sum(1),                              # [N_FIELDS, n_chips]
+        lw.sum((0, 2)).astype(jnp.int32)[None],       # link_words
+        lb[-1].sum(-1).astype(jnp.int32)[None],       # link_backlog level
+    ], axis=0)
+    depth = m.flight.blocks.shape[0]
+    slot = jnp.mod(m.blocks, depth)
+    flight = FlightRing(
+        blocks=jax.lax.dynamic_update_slice(
+            m.flight.blocks, row[None], (slot, 0, 0)),
+        t0=m.flight.t0.at[slot].set(m.steps),
+        idx=m.flight.idx + 1)
+
+    return MetricsCarry(
+        steps=m.steps + jnp.int32(n_sub),
+        blocks=m.blocks + 1,
+        totals=totals, chip_totals=chip_totals, ema=ema, maxima=maxima,
+        hist=hist, util_ema=util_ema,
+        link_words=link_words, link_backlog=link_backlog,
+        link_util_ema=link_util_ema,
+        merge_occ_ema=merge_occ_ema, merge_occ_max=merge_occ_max,
+        inflight_ema=inflight_ema, inflight_max=inflight_max,
+        flight=flight)
+
+
+def metrics_summary(m: MetricsCarry,
+                    mcfg: MetricsConfig | None = None) -> dict:
+    """Host-side snapshot of the carry as plain-python nested dicts.
+
+    The only intended host sync point — exporters and the monitor CLI
+    read this, never the carry directly.
+    """
+    host = jax.tree.map(np.asarray, m)
+    out: dict[str, Any] = {
+        "steps": int(host.steps),
+        "blocks": int(host.blocks),
+        "hist_edges": list(HIST_EDGES),
+        "totals": {}, "ema": {}, "max": {}, "hist": {}, "chip_totals": {},
+    }
+    for i, f in enumerate(SCALAR_FIELDS):
+        out["totals"][f] = int(host.totals[i])
+        out["ema"][f] = float(host.ema[i])
+        out["max"][f] = int(host.maxima[i])
+        out["hist"][f] = [int(v) for v in host.hist[i]]
+        out["chip_totals"][f] = [int(v) for v in host.chip_totals[i]]
+    out["util_ema"] = float(host.util_ema)
+    out["link"] = {
+        "words": host.link_words.tolist(),
+        "backlog": host.link_backlog.tolist(),
+        "util_ema": [[float(v) for v in row]
+                     for row in host.link_util_ema],
+        "capacity": int(mcfg.link_capacity) if mcfg else 0,
+    }
+    out["merge"] = {"occ_ema": float(host.merge_occ_ema),
+                    "occ_max": int(host.merge_occ_max)}
+    out["inflight"] = {"occ_ema": float(host.inflight_ema),
+                       "occ_max": int(host.inflight_max)}
+    return out

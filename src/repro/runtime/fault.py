@@ -181,6 +181,16 @@ class ResilientRunner:
       SendQueue; traffic to dead chips is culled into
       ``CommStats.lost_to_failure``.  Checkpointing is synchronous here:
       the recovery boundary must only ever see committed state.
+    * **Flight recorder.**  When ``flight_of`` and ``flight_dir`` are
+      set, every :class:`ChipFailure` snapshots the telemetry flight
+      ring (``flight_of(state)`` extracts a
+      :class:`repro.obs.FlightRing` — e.g. ``lambda s:
+      s.metrics.flight``) from the *failing* state and dumps it, with
+      the recovery log so far, as a structured JSONL post-mortem
+      artifact ``flight_dir/flight_<step>.jsonl`` (paths collected in
+      ``self.flight_dumps``).  The dump happens before the
+      ``max_recoveries`` give-up check, so the terminal failure is
+      post-mortemed too.
     """
 
     make_step: Callable[[tuple], Callable[[Any, int], tuple]]
@@ -190,8 +200,29 @@ class ResilientRunner:
     ckpt_every: int = 10
     keep: int = 3
     max_recoveries: int = 4
+    flight_of: Callable[[Any], Any] | None = None
+    flight_dir: str | None = None
     records: dict = dataclasses.field(default_factory=dict)
     recoveries: list = dataclasses.field(default_factory=list)
+    flight_dumps: list = dataclasses.field(default_factory=list)
+    _last_state: Any = dataclasses.field(default=None, repr=False)
+
+    def _dump_flight(self, failure: "ChipFailure") -> None:
+        if (self.flight_of is None or self.flight_dir is None
+                or self._last_state is None):
+            return
+        from repro.obs import dump_flight, phase_scope
+        flight = self.flight_of(self._last_state)
+        if flight is None:
+            return
+        with phase_scope("fabric/recovery_dump"):
+            path = (f"{self.flight_dir}/flight_{failure.step:06d}"
+                    f"_{len(self.flight_dumps)}.jsonl")
+            dump_flight(path, flight, recoveries=self.recoveries,
+                        failure=failure,
+                        meta={"n_steps_detected_at": failure.step,
+                              "recoveries_so_far": len(self.recoveries)})
+            self.flight_dumps.append(path)
 
     def run(self, init_state: Any, n_steps: int,
             healthy: tuple | None = None) -> tuple:
@@ -209,6 +240,7 @@ class ResilientRunner:
             def step_fn(state, step, _inner=inner, _healthy=healthy):
                 state, record = _inner(state, step)
                 self.records[step] = record
+                self._last_state = state
                 surviving = self.detect(state, step, _healthy)
                 if surviving is not None:
                     surviving = tuple(sorted(surviving))
@@ -223,6 +255,7 @@ class ResilientRunner:
             try:
                 return runner.run(init_state, n_steps), healthy
             except ChipFailure as failure:
+                self._dump_flight(failure)
                 if len(self.recoveries) >= self.max_recoveries:
                     raise
                 last = ckpt.latest_step(self.ckpt_dir)

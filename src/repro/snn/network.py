@@ -46,6 +46,8 @@ from repro.core import pulse_comm as pc
 from repro.core import routing as rt
 from repro.core import topology as tpo
 from repro.core import transport as tp
+from repro.obs import metrics as obm
+from repro.obs.trace import phase_scope
 from repro.snn import neuron as nr
 from repro.snn import synapse as sy
 
@@ -70,6 +72,13 @@ class NetworkConfig:
     # (see repro.core.resilience; dead_links needs a topology).
     healthy: Any = None                # alive chips (indices / bool mask)
     dead_links: tuple = ()             # cut (chip, port) pairs
+    # Telemetry: True (defaults) or a repro.obs.MetricsConfig threads a
+    # device-resident MetricsCarry through the scan (NetworkState.metrics)
+    # — aggregated in-scan with zero host syncs, checkpoint-visible, and
+    # never read by the delivered spike path, so runs are bitwise-equal
+    # with it on or off.  Supported on the batched (local-fabric) forms;
+    # shard-local entry points leave state.metrics untouched.
+    telemetry: Any = None
 
     def __post_init__(self):
         if self.neuron_model not in ("lif", "adex"):
@@ -101,6 +110,7 @@ class NetworkState(NamedTuple):
     merge: Any = None            # merge queue (full mode, merge_rate > 0)
     sendq: Any = None            # retransmit queue (flow.retransmit_depth>0)
     pending: Any = None          # in-flight pipeline carry (cfg.pipeline)
+    metrics: Any = None          # MetricsCarry when cfg.telemetry is set
 
 
 class StepRecord(NamedTuple):
@@ -164,6 +174,39 @@ def init_params(
     return NetworkParams(crossbar=xb, neuron=nparams, table=table)
 
 
+def _metrics_cfg(cfg: NetworkConfig) -> obm.MetricsConfig | None:
+    """Resolve cfg.telemetry to a MetricsConfig (None = disabled).
+
+    An unset ``link_capacity`` is filled from the topology's
+    ``link_bandwidth`` so the link utilization EMA is a true ratio
+    whenever the fabric actually bounds its links.
+    """
+    t = cfg.telemetry
+    if t is None or t is False:
+        return None
+    mcfg = obm.MetricsConfig() if t is True else t
+    if mcfg.link_capacity == 0 and cfg.topology is not None \
+            and cfg.topology.link_bandwidth > 0:
+        mcfg = dataclasses.replace(mcfg,
+                                   link_capacity=cfg.topology.link_bandwidth)
+    return mcfg
+
+
+def _metrics_update(cfg: NetworkConfig, fabric: fb.PulseFabric,
+                    metrics: Any, stats: pc.CommStats, *,
+                    merge: Any = None, pending: Any = None) -> Any:
+    """Fold one fabric call's stats into the carry (no-op when off).
+
+    Telemetry observes the event fabric; the dense (differentiable)
+    path has no fabric counters, so its zero-stats are not folded in.
+    """
+    if metrics is None or not fabric.batched or cfg.comm_mode != "event":
+        return metrics
+    with phase_scope("obs/metrics_update"):
+        return obm.metrics_update(_metrics_cfg(cfg), metrics, stats,
+                                  merge=merge, pending=pending)
+
+
 def init_state(cfg: NetworkConfig, params: NetworkParams) -> NetworkState:
     c = cfg.comm
     _, ninit = _neuron_fns(cfg)
@@ -174,9 +217,15 @@ def init_state(cfg: NetworkConfig, params: NetworkParams) -> NetworkState:
     )(jnp.arange(c.n_chips))
     fabric = local_fabric(cfg)
     pending = fabric.init_pending() if cfg.pipeline else None
+    mcfg = _metrics_cfg(cfg)
+    metrics = None
+    if mcfg is not None:
+        n_ports = cfg.topology.n_ports if cfg.topology is not None else 1
+        metrics = obm.metrics_init(mcfg, c.n_chips, n_ports)
     return NetworkState(neuron=nstate, ring=ring, t=jnp.asarray(0, jnp.int32),
                         flow=fabric.init_flow(), merge=fabric.init_merge(),
-                        sendq=fabric.init_sendq(), pending=pending)
+                        sendq=fabric.init_sendq(), pending=pending,
+                        metrics=metrics)
 
 
 # ---------------------------------------------------------------------------
@@ -295,8 +344,11 @@ def _step_impl(
 
     ring = vm(dl.tick)(ring)
     voltage = nstate.v if cfg.record_voltage else jnp.zeros_like(nstate.v)
+    metrics = _metrics_update(cfg, fabric, state.metrics, stats,
+                              merge=merge)
     new_state = NetworkState(neuron=nstate, ring=ring, t=state.t + 1,
-                             flow=flow, merge=merge, sendq=sendq)
+                             flow=flow, merge=merge, sendq=sendq,
+                             metrics=metrics)
     rec = StepRecord(spikes=spikes, voltage=voltage, stats=stats)
     return new_state, rec, new_w, new_stdp
 
@@ -399,9 +451,13 @@ def _block_impl(
             ebs, table, ring0, state.flow, state.merge, state.sendq)
     ring = dl.DelayRing(ring=res.ring.ring, now=res.ring.now + B)
 
+    metrics = _metrics_update(
+        cfg, fabric, state.metrics, res.stats, merge=res.merge,
+        pending=res.pending if _pipeline_active(cfg) else None)
     new_state = NetworkState(neuron=nstate, ring=ring, t=state.t + B,
                              flow=res.flow, merge=res.merge,
-                             sendq=res.sendq, pending=res.pending)
+                             sendq=res.sendq, pending=res.pending,
+                             metrics=metrics)
     rec = StepRecord(spikes=spikes, voltage=voltage, stats=res.stats)
     return new_state, rec, new_w, new_stdp
 
@@ -445,21 +501,30 @@ def _ensure_carries(fabric: fb.PulseFabric, state: NetworkState,
 
 
 def _flush_and_realign(
-    fabric: fb.PulseFabric, final: NetworkState, recs: StepRecord
+    cfg: NetworkConfig, fabric: fb.PulseFabric, final: NetworkState,
+    recs: StepRecord
 ) -> tuple[NetworkState, StepRecord]:
     """Pipelined epilogue: drain the in-flight carry, then realign the
     per-block stats — the scan's slot f carried block f−1's stats (slot 0
     the empty prologue), so drop slot 0 and append the flush.  ``spikes``
     / ``voltage`` were never lagged (phase 1 runs in place) and stay
-    untouched."""
+    untouched.
+
+    Telemetry folds the flushed block in here too, so run-level totals
+    close; the carry saw the blocks in pipeline order (an all-zero
+    prologue first, the last block at the flush), which shifts the EMA
+    sample sequence by one block but leaves totals/histograms exact up
+    to the extra zero block."""
     res = fabric.flush_pending(final.ring, final.pending, final.flow,
                                final.merge, final.sendq)
     stats = jax.tree.map(
         lambda a, z: jnp.concatenate([a[1:], z[None]], axis=0),
         recs.stats, res.stats)
     recs = recs._replace(stats=stats)
+    metrics = _metrics_update(cfg, fabric, final.metrics, res.stats,
+                              merge=res.merge, pending=res.pending)
     final = final._replace(ring=res.ring, merge=res.merge,
-                           pending=res.pending)
+                           pending=res.pending, metrics=metrics)
     return final, recs
 
 
@@ -510,7 +575,7 @@ def run(
 
         final, recs = jax.lax.scan(block_body, state, blocks)
         if _pipeline_active(cfg):
-            final, recs = _flush_and_realign(fabric, final, recs)
+            final, recs = _flush_and_realign(cfg, fabric, final, recs)
         rec = jax.tree.map(
             lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
             recs)
@@ -560,8 +625,8 @@ def run_plastic(
         (final_state, w_final, s_final), recs = jax.lax.scan(
             block_body, (state, params.crossbar.w, sstate), blocks)
         if _pipeline_active(cfg):
-            final_state, recs = _flush_and_realign(fabric, final_state,
-                                                   recs)
+            final_state, recs = _flush_and_realign(cfg, fabric,
+                                                   final_state, recs)
         rec = jax.tree.map(
             lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
             recs)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import delays as dl
 from repro.core import events as ev
 from repro.core import fabric as fb
@@ -315,9 +316,8 @@ def test_retransmit_requeues_instead_of_dropping():
                                          retransmit_depth=128))
     assert tot["stalled"] == 0
     assert tot["queued"] == 0   # drained once credits returned
-    assert tot["sent"] == (tot["deposited"] + tot["expired"]
-                           + tot["overflow"] + tot["stalled"]
-                           + tot["queued"])
+    obs.check_conservation(tot, delivered=tot["deposited"],
+                           queued=tot["queued"])
     # and it delivers strictly more than the historical drop-and-account
     dropped = _run_flow(fb.FlowControlConfig(capacity=2, drain_rate=1))
     assert dropped["stalled"] > 0
@@ -331,9 +331,8 @@ def test_retransmit_bounded_queue_overflow_is_accounted():
     tot = _run_flow(fb.FlowControlConfig(capacity=1, drain_rate=1,
                                          retransmit_depth=4))
     assert tot["stalled"] > 0
-    assert tot["sent"] == (tot["deposited"] + tot["expired"]
-                           + tot["overflow"] + tot["stalled"]
-                           + tot["queued"])
+    obs.check_conservation(tot, delivered=tot["deposited"],
+                           queued=tot["queued"])
 
 
 def test_retransmit_queued_events_expire_when_stalled_too_long():
@@ -344,7 +343,8 @@ def test_retransmit_queued_events_expire_when_stalled_too_long():
                                          retransmit_depth=512), steps=24)
     assert tot["queued"] == 0 and tot["deposited"] == 0
     assert tot["expired"] > 0
-    assert tot["sent"] == tot["expired"] + tot["overflow"] + tot["stalled"]
+    obs.check_conservation(tot, delivered=tot["deposited"],
+                           queued=tot["queued"])
 
 
 def test_ample_credits_with_retransmit_match_no_flow_bitwise():

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import delays as dl
 from repro.core import events as ev
 from repro.core import fabric as fb
@@ -206,21 +207,21 @@ def test_fused_conservation_under_merge_congestion():
     fab = fb.PulseFabric(cfgp, transport="local")
     ring, merge = rings, fab.init_merge()
     before = int(np.asarray(ring.ring).sum())
-    sent = accounted = 0
+    tot = {f: 0 for f in ("sent", "overflow", "expired", "stalled",
+                          "merge_dropped", "lost_to_failure")}
     for blk in range(len(ebs) // B):
         block = jax.tree.map(lambda *xs: jnp.stack(xs),
                              *ebs[blk * B:(blk + 1) * B])
         res = fab.superstep(block, tables, ring, None, merge)
         ring, merge = res.ring, res.merge
-        g = lambda f: int(np.asarray(getattr(res.stats, f)).sum())
-        sent += g("sent")
-        accounted += (g("overflow") + g("expired") + g("stalled")
-                      + g("merge_dropped") + g("lost_to_failure"))
+        for f in tot:
+            tot[f] += int(np.asarray(getattr(res.stats, f)).sum())
         ring = dl.DelayRing(ring=ring.ring, now=ring.now + B)
     deposited = int(np.asarray(ring.ring).sum()) - before
     queued = int(np.asarray(merge.occupancy()).sum())
-    assert sent == deposited + accounted + queued
-    assert accounted > 0, "hostile load must drop/expire something"
+    report = obs.check_conservation(tot, delivered=deposited, queued=queued)
+    assert sum(report.legs.values()) > 0, \
+        "hostile load must drop/expire something"
 
 
 # ---------------------------------------------------------------------------

@@ -92,6 +92,37 @@ def test_bf16_dot_flops_counted():
     assert st.hbm_bytes >= (m * k + k * n) * 2
 
 
+_CRAFTED_HLO = """\
+HloModule crafted
+
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8]{0} parameter(0)
+  %a2a = f32[8]{0} all-to-all(f32[8]{0} %p0), replica_groups={{0,1}}
+  %ar = f32[8]{0} all-reduce(f32[8]{0} %a2a), to_apply=%sum
+  %a2a.2 = f32[8]{0} all-to-all(f32[8]{0} %ar), replica_groups={{0,1}}
+  ROOT %out = f32[8]{0} add(f32[8]{0} %a2a.2, f32[8]{0} %p0)
+}
+"""
+
+
+def test_count_collectives_on_hlo_text():
+    counts = hlo_stats.count_collectives(_CRAFTED_HLO)
+    assert counts["all-to-all"] == 2, counts
+    assert counts["all-reduce"] == 1, counts
+    assert hlo_stats.count_collectives(_CRAFTED_HLO, "all-to-all") == 2
+    assert hlo_stats.count_collectives(_CRAFTED_HLO, "all-reduce") == 1
+    # Absent kinds count as zero rather than raising.
+    assert hlo_stats.count_collectives(_CRAFTED_HLO, "all-gather") == 0
+
+
+def test_count_collectives_on_compiled_executable():
+    compiled = jax.jit(lambda v: v * 2.0 + 1.0).lower(
+        jnp.zeros((16,), jnp.float32)).compile()
+    counts = hlo_stats.count_collectives(compiled)
+    assert sum(counts.values()) == 0, counts
+    assert hlo_stats.count_collectives(compiled, "all-to-all") == 0
+
+
 def test_shape_regex_dtypes():
     from repro.launch.hlo_stats import _SHAPE_RE
 

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import delays as dl
 from repro.core import events as ev
 from repro.core import fabric as fb
@@ -237,38 +238,43 @@ def test_conservation_includes_in_flight_carry(mode, merge_rate):
     ring, merge, pending = rings, fab.init_merge(), fab.init_pending()
     before = int(np.asarray(ring.ring).sum())
 
-    sent = accounted = 0
+    tot = {fld: 0 for fld in ("sent", "overflow", "expired", "stalled",
+                              "merge_dropped", "lost_to_failure")}
+
+    def _acc(stats):
+        for fld in tot:
+            tot[fld] += int(np.asarray(getattr(stats, fld)).sum())
+
     for f in range(F):
         blk = jax.tree.map(lambda a: a[f], blocks)
         res = fab.pipeline_block(blk, tables, ring, None, merge, None,
                                  pending)
         merge, pending = res.merge, res.pending
         ring = dl.DelayRing(ring=res.ring.ring, now=res.ring.now + B)
-        s, a = _totals(res.stats)
-        sent, accounted = sent + s, accounted + a
+        _acc(res.stats)
         # the carried block's inject-side legs are not yet reported:
         # add them (and its surviving words) from the carry itself.
         carried_sent = int(np.asarray(pending.inject.sent).sum())
         carried_acc = sum(
-            int(np.asarray(getattr(pending.inject, f)).sum())
-            for f in ("overflow", "stalled", "wrap_expired", "lost"))
+            int(np.asarray(getattr(pending.inject, fld)).sum())
+            for fld in ("overflow", "stalled", "wrap_expired", "lost"))
         in_flight = int(np.asarray(pending.occupancy()).sum())
         assert in_flight > 0, f"carry empty after block {f}"
         deposited = int(np.asarray(ring.ring).sum()) - before
         queued = (0 if merge is None
                   else int(np.asarray(merge.occupancy()).sum()))
-        assert (sent + carried_sent
-                == deposited + accounted + carried_acc + queued
-                + in_flight), f"conservation broke at block {f}"
+        obs.check_conservation(tot, delivered=deposited, queued=queued,
+                               in_flight=in_flight,
+                               extra_injected=carried_sent,
+                               extra_accounted=carried_acc)
 
     fres = fab.flush_pending(ring, pending, None, merge)
-    s, a = _totals(fres.stats)
-    sent, accounted = sent + s, accounted + a
+    _acc(fres.stats)
     deposited = int(np.asarray(fres.ring.ring).sum()) - before
     queued = (0 if fres.merge is None
               else int(np.asarray(fres.merge.occupancy()).sum()))
     assert int(np.asarray(fres.pending.occupancy()).sum()) == 0
-    assert sent == deposited + accounted + queued
+    obs.check_conservation(tot, delivered=deposited, queued=queued)
 
 
 def test_straggler_expires_with_accounting_never_ghosts():
@@ -492,10 +498,9 @@ _HLO_SCRIPT = textwrap.dedent("""
                    P("chip")),
         check_rep=False)
     compiled = jax.jit(f).lower(ebs, tables, rings, pending).compile()
-    res = hlo_stats.analyze_collectives_only(compiled.as_text())
-    assert res["counts"]["all-to-all"] == 1, res["counts"]
-    others = sum(v for k, v in res["counts"].items() if k != "all-to-all")
-    assert others == 0, res["counts"]
+    counts = hlo_stats.count_collectives(compiled)
+    assert hlo_stats.count_collectives(compiled, "all-to-all") == 1, counts
+    assert sum(counts.values()) == 1, counts
     print("ONE_COLLECTIVE_PER_PIPELINED_BLOCK")
 
     # Scheduling pin: the issue (all_to_all on this block's slab) is

@@ -209,12 +209,10 @@ _HLO_SCRIPT = textwrap.dedent("""
                 merge=P("chip") if merge_rate else None, sendq=None),
             check_rep=False)
         compiled = jax.jit(f).lower(ebs, tables, rings, merge_b).compile()
-        res = hlo_stats.analyze_collectives_only(compiled.as_text())
-        count = res["counts"]["all-to-all"]
-        others = sum(v for k, v in res["counts"].items()
-                     if k != "all-to-all")
-        assert count == 1, (mode, merge_rate, res["counts"])
-        assert others == 0, (mode, merge_rate, res["counts"])
+        counts = hlo_stats.count_collectives(compiled)
+        count = hlo_stats.count_collectives(compiled, "all-to-all")
+        assert count == 1, (mode, merge_rate, counts)
+        assert sum(counts.values()) == count, (mode, merge_rate, counts)
 
         got = f(ebs, tables, rings, merge_b)
         ref = local.superstep(ebs, tables, rings, None, merge_b)

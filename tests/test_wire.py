@@ -296,12 +296,10 @@ _HLO_SCRIPT = textwrap.dedent("""
         f = shard_map(body, mesh=mesh, in_specs=(P("chip"),) * 4,
                       out_specs=P("chip"), check_rep=False)
         compiled = jax.jit(f).lower(ebs, tables, rings, merge_b).compile()
-        res = hlo_stats.analyze_collectives_only(compiled.as_text())
-        count = res["counts"]["all-to-all"]
-        assert count == 1, (mode, merge_rate, res["counts"])
-        others = sum(v for k, v in res["counts"].items()
-                     if k != "all-to-all")
-        assert others == 0, (mode, merge_rate, res["counts"])
+        counts = hlo_stats.count_collectives(compiled)
+        count = hlo_stats.count_collectives(compiled, "all-to-all")
+        assert count == 1, (mode, merge_rate, counts)
+        assert sum(counts.values()) == count, (mode, merge_rate, counts)
         print(f"ONE_ALL_TO_ALL mode={mode} merge={merge_rate}")
     print("SINGLE_COLLECTIVE_OK")
 """)
